@@ -1,0 +1,46 @@
+"""Ablation (beyond paper): PPO feedback-buffer update threshold.
+
+The paper fixes the threshold "based on the average query load"; this
+sweep quantifies the stability-vs-adaptivity trade-off it gestures at:
+too-frequent updates (small buffers) give noisy advantage estimates,
+too-sparse updates slow adaptation within the evaluation horizon.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Bench, fresh_testbed
+from repro.core.coordinator import Coordinator
+from repro.core.identifier import OnlineQueryIdentifier
+from repro.core.workload import QueryGenerator
+
+N_SLOTS = 30
+PER_SLOT = 160
+SLO = 20.0
+
+
+def run(threshold: int, seed: int = 0) -> float:
+    nodes, qual, w = fresh_testbed(seed=seed)
+    gen = QueryGenerator(seed=seed + 1)
+    ident = OnlineQueryIdentifier(64, len(nodes), seed=seed + 2,
+                                  update_threshold=threshold)
+    coord = Coordinator(nodes, ident, seed=seed + 3)
+    quals = []
+    for i, qs in enumerate(gen.dirichlet_slots(N_SLOTS, PER_SLOT,
+                                               alpha=2.0)):
+        m = coord.run_slot(qs, SLO)
+        if i >= 2 * N_SLOTS // 3:
+            quals.append(m.quality_mean * (1 - m.drop_rate))
+    return float(np.mean(quals))
+
+
+def main() -> None:
+    b = Bench("ablation_ppo_threshold")
+    b.add("update_threshold", "quality")
+    for threshold in (40, 160, 480, 1600):
+        b.add(threshold, round(run(threshold), 4))
+    b.finish(["update threshold (queries)", "quality"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Shared benchmark scaffolding: cached testbed, CSV/markdown emitters."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cluster import EdgeNode, make_paper_testbed
+from repro.core.inter_node import CapacityFunction
+
+OUTDIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+
+_PROFILE_CACHE: Dict[int, List[CapacityFunction]] = {}
+
+
+def fresh_testbed(seed: int = 0, profile: bool = True,
+                  levels=(5, 10, 15, 20, 25, 30)):
+    """New testbed; capacity profiles cached per seed (they're a pure
+    function of the node's oracles, not of scheduler state)."""
+    nodes, qual, w = make_paper_testbed(seed=seed)
+    if profile:
+        if seed not in _PROFILE_CACHE:
+            for n in nodes:
+                n.profile(levels)
+            _PROFILE_CACHE[seed] = [n.capacity for n in nodes]
+        else:
+            for n, cap in zip(nodes, _PROFILE_CACHE[seed]):
+                n.capacity = cap
+    return nodes, qual, w
+
+
+class Bench:
+    """Collects (name, value) rows; prints CSV and writes markdown."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: List[tuple] = []
+        self.t0 = time.time()
+
+    def add(self, *row):
+        self.rows.append(row)
+        print(",".join(str(r) for r in row), flush=True)
+
+    def finish(self, header: Sequence[str]):
+        os.makedirs(OUTDIR, exist_ok=True)
+        path = os.path.join(OUTDIR, f"{self.name}.md")
+        with open(path, "w") as f:
+            f.write(f"# {self.name} ({time.time() - self.t0:.0f}s)\n\n")
+            f.write("| " + " | ".join(header) + " |\n")
+            f.write("|" + "---|" * len(header) + "\n")
+            for row in self.rows:
+                f.write("| " + " | ".join(
+                    f"{v:.4f}" if isinstance(v, float) else str(v)
+                    for v in row) + " |\n")
+        print(f"[{self.name}] wrote {path} ({time.time() - self.t0:.0f}s)",
+              flush=True)
+
+
+def drop_weighted_quality(results) -> tuple:
+    """(mean quality counting drops as 0, drop rate) — the paper's
+    invalid-query rule."""
+    if not results:
+        return 0.0, 0.0
+    q = np.mean([r.quality for r in results])
+    d = np.mean([r.dropped for r in results])
+    return float(q), float(d)

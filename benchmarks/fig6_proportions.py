@@ -1,0 +1,30 @@
+"""Fig. 6: query/resource proportions per model size class vs SLO."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Bench, fresh_testbed
+
+
+def main() -> None:
+    b = Bench("fig6_proportions")
+    b.add("L", "size_class", "query_share", "resource_share")
+    nodes, qual, w = fresh_testbed(seed=0, profile=False)
+    node = nodes[3]                       # dual-GPU node
+    for slo in (5.0, 10.0, 20.0, 40.0):
+        alloc = node.scheduler.schedule(500, slo - node.search_time)
+        by_class = {}
+        for (m, k), p in alloc.p.items():
+            cls = node.mgr.specs[m].size_class
+            q, r = by_class.get(cls, (0.0, 0.0))
+            by_class[cls] = (q + p, r + alloc.R[(m, k)])
+        total_p = sum(v[0] for v in by_class.values()) or 1.0
+        total_r = sum(v[1] for v in by_class.values()) or 1.0
+        for cls in ("small", "mid", "large"):
+            q, r = by_class.get(cls, (0.0, 0.0))
+            b.add(slo, cls, round(q / total_p, 3), round(r / total_r, 3))
+    b.finish(["L (s)", "class", "query share", "resource share"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Motivation case studies (paper §II, Figs 1-3).
+
+Fig 1: Random vs Domain vs Oracle allocation quality.
+Fig 2: latency vs workload skew for Domain vs Oracle allocation.
+Fig 3a: model deployment (1B / hybrid / 3B) quality vs time budget.
+Fig 3b: latency vs (memory fraction, query ratio) between two models.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Bench, fresh_testbed
+from repro.core.baselines import DomainAllocator, OracleAllocator
+from repro.core.workload import QueryGenerator
+
+
+def fig1_and_2() -> None:
+    b = Bench("motivation_fig1_2")
+    b.add("experiment", "strategy", "value")
+    nodes, qual, w = fresh_testbed(seed=0, profile=False)
+    gen = QueryGenerator(seed=1)
+    primary = {d: int(np.argmax(w[:, d])) for d in range(6)}
+    orc, dom = OracleAllocator(qual), DomainAllocator(primary, len(nodes))
+    rng = np.random.default_rng(0)
+
+    from repro.core.inter_node import inter_node_schedule
+    caps = np.array([900.0, 500.0, 1100.0, 1900.0])   # profiled C_n(60s)
+
+    def run_alloc(kind: str, qs):
+        if kind == "random":
+            assign = rng.integers(0, len(nodes), len(qs))
+        elif kind == "domain":
+            probs = dom.probs_for_domains([q.domain for q in qs])
+            assign = probs.argmax(1)
+        else:   # oracle: coverage-aware probs + capacity-aware Alg. 1
+            probs = orc.probs_for_domains([q.domain for q in qs])
+            assign, _ = inter_node_schedule(probs, caps, rng)
+        res = []
+        lat = []
+        for n, node in enumerate(nodes):
+            sub = [qs[i] for i in np.where(assign == n)[0]]
+            if not sub:
+                continue
+            # fixed mid-size deployment (the paper's §II setting): latency
+            # is the RAW makespan, so node overload actually shows up
+            mid = node.pool[1]
+            t = float(node.lat.latency(mid, len(sub) / node.num_gpus, 0.8,
+                                       noisy=False))
+            lat.append(t + node.search_time)
+            res += node.process_slot(sub, 60.0)
+        q = np.mean([r.quality for r in res])
+        return float(q), float(np.max(lat))
+
+    qs = gen.sample(1500)
+    for kind in ("random", "domain", "oracle"):
+        q, _ = run_alloc(kind, qs)
+        b.add("fig1_quality", kind, round(q, 4))
+    for skew_name, counts in (("balanced", (500, 500, 500)),
+                              ("moderate", (750, 375, 375)),
+                              ("high", (1000, 250, 250))):
+        p = np.zeros(6)
+        p[[3, 2, 1]] = counts            # sports/law/finance-style trio
+        p = p / p.sum()
+        qs = gen.sample(1500, p)
+        for kind in ("domain", "oracle"):
+            _, lat = run_alloc(kind, qs)
+            b.add(f"fig2_latency_{skew_name}", kind, round(lat, 2))
+    b.finish(["experiment", "strategy", "value"])
+
+
+def fig3() -> None:
+    b = Bench("motivation_fig3")
+    b.add("experiment", "config", "budget_or_ratio", "value")
+    nodes, qual, w = fresh_testbed(seed=0, profile=False)
+    node = nodes[0]
+    small, mid = node.pool[0], node.pool[1]
+    # Fig 3a: 1000 requests, quality vs budget for 3 fixed deployments
+    for budget in (30.0, 50.0, 70.0, 90.0):
+        for cfg_name, split in (("1B-only", {small.name: 1.0}),
+                                ("hybrid", {small.name: .5, mid.name: .5}),
+                                ("3B-only", {mid.name: 1.0})):
+            R = 1.0 / len(split)
+            t_total, qsum, n_ok = 0.0, 0.0, 0
+            for m, frac in split.items():
+                spec = node.mgr.specs[m]
+                nq = int(1000 * frac)
+                t = float(node.lat.latency(spec, nq, R, noisy=False))
+                t_total = max(t_total, t)
+                done = nq if t <= budget else int(nq * budget / t)
+                qsum += done * spec.base_quality
+                n_ok += done
+            qual_w = qsum / 1000          # drops count as 0
+            b.add("fig3a_quality", cfg_name, budget, round(qual_w, 4))
+    # Fig 3b: latency vs (mem to 3B, queries to 3B)
+    for mem3 in (0.45, 0.55, 0.65, 0.75, 0.83):
+        for ratio3 in (0.6, 0.8, 0.9):
+            t3 = float(node.lat.latency(node.mgr.specs[mid.name],
+                                        int(1000 * ratio3), mem3,
+                                        noisy=False))
+            t1 = float(node.lat.latency(node.mgr.specs[small.name],
+                                        int(1000 * (1 - ratio3)),
+                                        max(1 - mem3, small.min_mem_frac),
+                                        noisy=False))
+            b.add("fig3b_latency", f"mem3B={mem3}", ratio3,
+                  round(max(t3, t1), 2))
+    b.finish(["experiment", "config", "x", "value"])
+
+
+def main() -> None:
+    fig1_and_2()
+    fig3()
+
+
+if __name__ == "__main__":
+    main()

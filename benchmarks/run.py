@@ -1,0 +1,71 @@
+"""Benchmark driver: one section per paper table/figure + kernel
+micro-benchmarks.  ``PYTHONPATH=src python -m benchmarks.run``"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def kernel_microbench() -> None:
+    """Wall-time of the jnp reference paths (CPU container; the Pallas
+    kernels are TPU-target and validated by tests in interpret mode)."""
+    import jax
+    from repro.kernels import ops
+    from benchmarks.common import Bench
+    b = Bench("kernel_microbench")
+    b.add("name", "us_per_call", "derived")
+    key = jax.random.PRNGKey(0)
+
+    def timeit(fn, n=5):
+        fn()  # compile
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(fn())
+        return (time.perf_counter() - t0) / n * 1e6
+
+    q = jax.random.normal(key, (1, 8, 256, 64))
+    k = jax.random.normal(key, (1, 2, 256, 64))
+    v = jax.random.normal(key, (1, 2, 256, 64))
+    us = timeit(lambda: ops.flash_attention(q, k, v, use_pallas=False))
+    b.add("attention_ref_256", round(us, 1),
+          f"{2*2*8*256*256*64/us*1e6/1e9:.1f}GFLOP/s")
+    qq = jax.random.normal(key, (64, 256))
+    dd = jax.random.normal(key, (4096, 256))
+    us = timeit(lambda: ops.retrieval_topk(qq, dd, 5, use_pallas=False))
+    b.add("topk_ref_64x4096", round(us, 1),
+          f"{2*64*4096*256/us*1e6/1e9:.1f}GFLOP/s")
+    b.finish(["name", "us_per_call", "derived"])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="table1|table2|table3|fig5|fig6|motivation|kernels")
+    args = ap.parse_args()
+    sections = {
+        "table1": lambda: __import__("benchmarks.table1_latency_fit",
+                                     fromlist=["main"]).main(),
+        "table2": lambda: __import__("benchmarks.table2_allocation",
+                                     fromlist=["main"]).main(),
+        "table3": lambda: __import__("benchmarks.table3_intra_node",
+                                     fromlist=["main"]).main(),
+        "fig5": lambda: __import__("benchmarks.fig5_skew",
+                                   fromlist=["main"]).main(),
+        "fig6": lambda: __import__("benchmarks.fig6_proportions",
+                                   fromlist=["main"]).main(),
+        "motivation": lambda: __import__("benchmarks.motivation",
+                                         fromlist=["main"]).main(),
+        "ablation": lambda: __import__("benchmarks.ablation_ppo",
+                                       fromlist=["main"]).main(),
+        "kernels": kernel_microbench,
+    }
+    todo = [args.only] if args.only else list(sections)
+    for name in todo:
+        print(f"=== {name} ===", flush=True)
+        t0 = time.time()
+        sections[name]()
+        print(f"=== {name} done in {time.time()-t0:.0f}s ===", flush=True)
+
+
+if __name__ == "__main__":
+    main()

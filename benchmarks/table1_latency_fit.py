@@ -1,0 +1,29 @@
+"""Table I: RMSE of latency-predictor candidate forms per model size."""
+from __future__ import annotations
+
+from benchmarks.common import Bench
+from repro.configs.edge_pool import MODEL_SPECS
+from repro.core.latency_model import LatencyOracle, fit_latency_models
+
+FORMS = ("linear", "quadratic", "exponential", "cubic")
+
+
+def main() -> None:
+    b = Bench("table1_latency_fit")
+    b.add("model", *FORMS, "nrmse_quadratic_pct")
+    oracle = LatencyOracle(seed=0)
+    for name in ("llama-1b", "llama-3b", "llama-8b"):
+        spec = MODEL_SPECS[name]
+        _, rmses = fit_latency_models(oracle, spec, seed=2)
+        import numpy as np
+        rng = np.random.default_rng(9)
+        q = rng.integers(1, 800, 256)
+        R = rng.uniform(spec.min_mem_frac, 1.0, 256)
+        spread = oracle.latency(spec, q, R, noisy=False)
+        nrmse = rmses["quadratic"] / (spread.max() - spread.min()) * 100
+        b.add(name, *(round(rmses[f], 3) for f in FORMS), round(nrmse, 2))
+    b.finish(["model", *FORMS, "NRMSE_quad_%"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Table III: intra-node scheduling vs fixed deployments over latency
+SLOs (DomainQA setting: 500 queries, L in {5, 10, 15} s)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Bench, drop_weighted_quality, fresh_testbed
+from repro.core.baselines import FixedDeploymentScheduler
+from repro.core.workload import QueryGenerator
+
+METHODS = ["Small-Param", "Mid-Param", "Mixed-Param.1", "Mixed-Param.2",
+           "Intra-node"]
+KINDS = {"Small-Param": "small", "Mid-Param": "mid",
+         "Mixed-Param.1": "mixed1", "Mixed-Param.2": "mixed2"}
+N_QUERIES = 500
+SLOTS = 4
+
+
+def run(method: str, slo: float, seed: int = 0):
+    nodes, qual, w = fresh_testbed(seed=seed, profile=False)
+    gen = QueryGenerator(seed=seed + 1)
+    quals, drops = [], []
+    # single node focus (paper: within-node comparison); use node 3 (2 GPUs)
+    node = nodes[3]
+    sched = None if method == "Intra-node" else \
+        FixedDeploymentScheduler(node, KINDS[method])
+    for _ in range(SLOTS):
+        qs = gen.sample(N_QUERIES)
+        res = node.process_slot(qs, slo, scheduler=sched)
+        q, d = drop_weighted_quality(res)
+        quals.append(q)
+        drops.append(d)
+    return float(np.mean(quals)), float(np.mean(drops))
+
+
+def main() -> None:
+    b = Bench("table3_intra_node")
+    b.add("L", "method", "quality", "drop_rate_pct")
+    for slo in (5.0, 10.0, 15.0):
+        for method in METHODS:
+            q, d = run(method, slo)
+            b.add(slo, method, round(q, 4), round(100 * d, 2))
+    b.finish(["L (s)", "method", "quality", "DropRate (%)"])
+
+
+if __name__ == "__main__":
+    main()

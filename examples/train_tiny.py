@@ -1,0 +1,98 @@
+"""Train a tiny LM on the synthetic DomainQA corpus (RAG-format
+supervision: context + question -> answer), with checkpointing.
+
+This produces the generator weights used by serve_rag_e2e.py — after a
+few hundred steps the model learns to copy the answer span out of the
+retrieved context, which is exactly the capability RAG serving needs.
+
+    PYTHONPATH=src python examples/train_tiny.py --steps 300
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data.corpus import generate_corpus
+from repro.data.tokenizer import EOS, Tokenizer
+from repro.models import Model
+from repro.rag.pipeline import build_prompt
+from repro.train import checkpoint
+from repro.train.optimizer import cosine_schedule
+from repro.train.train_step import init_opt_state, make_train_step
+
+SEQ = 192
+
+
+def make_dataset(tok, docs, qas, rng):
+    """(tokens, labels, mask) triplets: loss only on the answer span.
+    Contexts = gold doc + 2 shuffled distractors, matching the serving
+    distribution (top-k retrieval returns distractors too)."""
+    by_id = {d.doc_id: d for d in docs}
+    rows = []
+    for qa in qas:
+        ctx = [by_id[qa.doc_id].text] + [
+            docs[i].text for i in rng.choice(len(docs), 2, replace=False)]
+        rng.shuffle(ctx)
+        prompt = build_prompt(qa.question, ctx)
+        p_ids = tok.encode(prompt, bos=True)
+        a_ids = tok.encode(qa.answer) + [EOS]
+        ids = (p_ids + a_ids)[:SEQ + 1]
+        pad = SEQ + 1 - len(ids)
+        mask = [0] * (len(p_ids) - 1) + [1] * len(a_ids)
+        mask = (mask + [0] * pad)[:SEQ]
+        ids = ids + [0] * pad
+        rows.append((ids, mask))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--out", default="experiments/tiny_lm.npz")
+    ap.add_argument("--arch", default="olmo-1b")
+    args = ap.parse_args()
+
+    docs, qas = generate_corpus(40, seed=0)
+    texts = [d.text for d in docs] + [q.question for q in qas] \
+        + [q.answer for q in qas] + ["context : question : answer : <sep>"]
+    tok = Tokenizer.build(texts, max_vocab=4096)
+    cfg = get_smoke_config(args.arch, max_d_model=256, vocab=len(tok))
+    print(f"model: {cfg.name} d={cfg.d_model} vocab={cfg.vocab_size}")
+    model = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key, max_seq=SEQ)
+    opt = init_opt_state(params)
+    lr = cosine_schedule(3e-3, warmup=20, total=args.steps)
+    step_fn = jax.jit(make_train_step(model, lr=lr, remat=False))
+
+    rng = np.random.default_rng(0)
+    rows = make_dataset(tok, docs, qas, rng)
+    pos = jnp.broadcast_to(jnp.arange(SEQ, dtype=jnp.int32),
+                           (args.batch, SEQ))
+    t0 = time.time()
+    for step in range(args.steps):
+        idx = rng.choice(len(rows), args.batch)
+        ids = np.stack([rows[i][0] for i in idx])
+        msk = np.stack([rows[i][1] for i in idx])
+        batch = {"tokens": jnp.asarray(ids[:, :-1]),
+                 "labels": jnp.asarray(ids[:, 1:]),
+                 "loss_mask": jnp.asarray(msk),
+                 "positions": pos}
+        params, opt, m = step_fn(params, opt, batch)
+        if step % 25 == 0 or step == args.steps - 1:
+            print(f"step {step:4d}  loss {float(m['loss']):.4f}  "
+                  f"({time.time()-t0:.0f}s)")
+    checkpoint.save(args.out, params)
+    import json
+    import os
+    with open(os.path.splitext(args.out)[0] + "_vocab.json", "w") as f:
+        json.dump(tok.vocab, f)
+    print(f"saved {args.out} (+_vocab.json)")
+
+
+if __name__ == "__main__":
+    main()

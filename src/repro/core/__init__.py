@@ -1,0 +1,3 @@
+"""CoEdge-RAG's contribution: hierarchical scheduling for collaborative
+edge RAG — online PPO query identification, capacity-aware inter-node
+scheduling, OCO intra-node model/resource allocation."""

@@ -1,0 +1,82 @@
+"""Global coordinator: the CoEdge-RAG slot loop (paper Fig. 4).
+
+Per slot: encode queries -> online identifier -> probability vectors ->
+inter-node scheduling (Algorithm 1, capacity-aware) -> per-node
+intra-node scheduling + execution -> quality feedback -> PPO update.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cluster import EdgeNode, Query, QueryResult
+from repro.core.identifier import OnlineQueryIdentifier
+from repro.core.inter_node import inter_node_schedule
+
+
+@dataclass
+class SlotMetrics:
+    quality_mean: float
+    drop_rate: float
+    per_node_load: np.ndarray
+    n_queries: int
+
+
+class Coordinator:
+    def __init__(self, nodes: List[EdgeNode], identifier,
+                 *, use_inter_node: bool = True, seed: int = 0,
+                 node_schedulers: Optional[Dict[int, object]] = None):
+        self.nodes = nodes
+        self.identifier = identifier
+        self.use_inter_node = use_inter_node
+        self.node_schedulers = node_schedulers or {}
+        self._rng = np.random.default_rng(seed)
+        self.history: List[SlotMetrics] = []
+
+    def initialize(self, levels=tuple(range(5, 61, 5))) -> None:
+        """Offline capacity profiling (paper's initialization phase)."""
+        for node in self.nodes:
+            node.profile(levels)
+
+    def _capacities(self, slo_s: float) -> np.ndarray:
+        caps = []
+        for node in self.nodes:
+            caps.append(node.capacity(slo_s) if node.capacity else 1e9)
+        return np.asarray(caps)
+
+    def run_slot(self, queries: Sequence[Query], slo_s: float
+                 ) -> SlotMetrics:
+        if not queries:
+            return SlotMetrics(0.0, 0.0, np.zeros(len(self.nodes)), 0)
+        embs = np.stack([q.embedding for q in queries])
+        probs = self.identifier.identify(embs)
+        if self.use_inter_node:
+            assign, props = inter_node_schedule(
+                probs, self._capacities(slo_s), self._rng)
+        else:
+            # pure identifier sampling, no capacity awareness
+            cum = probs.cumsum(1)
+            r = self._rng.random((len(queries), 1))
+            assign = (r > cum).sum(1).clip(0, len(self.nodes) - 1)
+            props = np.bincount(assign, minlength=len(self.nodes)) \
+                / len(queries)
+        results: List[QueryResult] = []
+        for n, node in enumerate(self.nodes):
+            idx = np.where(assign == n)[0]
+            node_queries = [queries[i] for i in idx]
+            results += node.process_slot(
+                node_queries, slo_s,
+                scheduler=self.node_schedulers.get(n))
+        # feedback: realized composite quality (dropped -> 0)
+        by_qid = {r.qid: r for r in results}
+        scores = np.array([by_qid[q.qid].quality for q in queries])
+        self.identifier.feedback(embs, assign, scores)
+        self.identifier.maybe_update()
+        qual = float(np.mean([r.quality for r in results if not r.dropped])
+                     ) if any(not r.dropped for r in results) else 0.0
+        drop = float(np.mean([r.dropped for r in results]))
+        m = SlotMetrics(qual, drop, props, len(queries))
+        self.history.append(m)
+        return m

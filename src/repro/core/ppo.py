@@ -1,0 +1,138 @@
+"""Policy-only PPO for online query identification (paper §IV-A).
+
+Architecture (paper §V-A): four fully-connected layers
+(256-128-64-action_dim) with batch normalization and residual
+connections.  No critic/value network — the advantage signal is the
+batch-standardized composite quality feedback (Eq. 10):
+
+    f̄_i = (f_i - μ) / (σ + c),         c = 1e-8
+
+and the objective is the clipped surrogate with an entropy bonus
+(Eq. 11):
+
+    L_f = E[min(ρ_i f̄_i, clip(ρ_i, 1±ε) f̄_i)] + β H(π_θ)
+
+with ρ_i = π_θ(a_i|e_i) / π_θold(a_i|e_i).  Defaults follow the paper:
+lr 3e-4, ε = 0.02.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+HIDDEN = (256, 128, 64)
+
+
+def init_policy(key, embed_dim: int, n_actions: int) -> Dict:
+    dims = (embed_dim,) + HIDDEN + (n_actions,)
+    ks = jax.random.split(key, len(dims))
+    layers = []
+    for i in range(len(dims) - 1):
+        d_in, d_out = dims[i], dims[i + 1]
+        w = jax.random.normal(ks[i], (d_in, d_out)) * jnp.sqrt(2.0 / d_in)
+        layer = {"w": w, "b": jnp.zeros((d_out,))}
+        if i < len(dims) - 2:
+            # batch-norm scale/shift + running stats
+            layer.update(bn_g=jnp.ones((d_out,)), bn_b=jnp.zeros((d_out,)),
+                         bn_mu=jnp.zeros((d_out,)), bn_var=jnp.ones((d_out,)))
+            # residual projection (dims shrink, so project the skip path)
+            layer["res"] = jax.random.normal(
+                jax.random.fold_in(ks[i], 7), (d_in, d_out)) * jnp.sqrt(1.0 / d_in)
+        layers.append(layer)
+    return {"layers": layers}
+
+
+def _bn(layer, h, train: bool, momentum: float = 0.9):
+    if train:
+        mu = h.mean(0)
+        var = h.var(0) + 1e-5
+        new_mu = momentum * layer["bn_mu"] + (1 - momentum) * mu
+        new_var = momentum * layer["bn_var"] + (1 - momentum) * var
+    else:
+        mu, var = layer["bn_mu"], layer["bn_var"] + 1e-5
+        new_mu, new_var = layer["bn_mu"], layer["bn_var"]
+    hn = (h - mu) / jnp.sqrt(var)
+    return hn * layer["bn_g"] + layer["bn_b"], new_mu, new_var
+
+
+def policy_logits(params, e: jax.Array, train: bool = False
+                  ) -> Tuple[jax.Array, Dict]:
+    """e: [B, D] -> (logits [B, N], params w/ updated BN stats)."""
+    h = e
+    new_layers = []
+    for i, layer in enumerate(params["layers"]):
+        z = h @ layer["w"] + layer["b"]
+        if "bn_g" in layer:
+            z, mu, var = _bn(layer, z, train)
+            z = jax.nn.relu(z) + h @ layer["res"]     # residual skip
+            layer = dict(layer, bn_mu=mu, bn_var=var)
+        new_layers.append(layer)
+        h = z
+    return h, dict(params, layers=new_layers)
+
+
+def act_probs(params, e: jax.Array) -> jax.Array:
+    logits, _ = policy_logits(params, e, train=False)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+def standardize_feedback(f: jax.Array, c: float = 1e-8) -> jax.Array:
+    """Eq. 10 — batch-standardized reward."""
+    return (f - f.mean()) / (f.std() + c)
+
+
+def init_adam(params):
+    z = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+    return {"step": jnp.zeros((), jnp.int32), "mu": z,
+            "nu": jax.tree.map(lambda p: jnp.zeros_like(p), params)}
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "beta", "lr"))
+def ppo_update(params, old_params, opt_state, e, actions, f, *,
+               eps: float = 0.02, beta: float = 0.01, lr: float = 3e-4):
+    """One clipped-surrogate Adam step on a feedback batch.
+
+    e [B,D], actions [B] int, f [B] raw composite quality scores.
+    Returns (new_params, new_opt_state, metrics).
+    """
+    adv = standardize_feedback(f)
+    old_logits, _ = policy_logits(old_params, e, train=False)
+    old_logp = jax.nn.log_softmax(old_logits)[jnp.arange(e.shape[0]), actions]
+
+    def loss_fn(p):
+        logits, p_new = policy_logits(p, e, train=True)
+        logp_all = jax.nn.log_softmax(logits)
+        logp = logp_all[jnp.arange(e.shape[0]), actions]
+        rho = jnp.exp(logp - old_logp)
+        surr = jnp.minimum(rho * adv,
+                           jnp.clip(rho, 1 - eps, 1 + eps) * adv)
+        probs = jnp.exp(logp_all)
+        entropy = -(probs * logp_all).sum(-1).mean()
+        loss = -(surr.mean() + beta * entropy)
+        return loss, (p_new, entropy, rho.mean())
+
+    (loss, (p_stats, ent, rho_mean)), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(params)
+    # Adam (the paper's 3e-4 is an Adam-scale learning rate)
+    step = opt_state["step"] + 1
+    b1, b2, eps_a = 0.9, 0.999, 1e-8
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                      opt_state["mu"], grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                      opt_state["nu"], grads)
+    t = step.astype(jnp.float32)
+    upd = jax.tree.map(
+        lambda m, v: (m / (1 - b1 ** t)) /
+        (jnp.sqrt(v / (1 - b2 ** t)) + eps_a), mu, nu)
+    new_params = jax.tree.map(lambda p, u: p - lr * u, params, upd)
+    new_opt = {"step": step, "mu": mu, "nu": nu}
+    # keep the BN running stats updated during training passes
+    for i, layer in enumerate(new_params["layers"]):
+        if "bn_mu" in layer:
+            layer["bn_mu"] = p_stats["layers"][i]["bn_mu"]
+            layer["bn_var"] = p_stats["layers"][i]["bn_var"]
+    return new_params, new_opt, {"loss": loss, "entropy": ent,
+                                 "rho": rho_mean}

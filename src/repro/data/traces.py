@@ -1,0 +1,27 @@
+"""Arrival traces: ECW-style diurnal volume + Dirichlet domain skew."""
+from __future__ import annotations
+
+from typing import Iterator, List, Tuple
+
+import numpy as np
+
+
+def diurnal_volume_trace(n_slots: int, base: int = 300, *,
+                         amplitude: float = 0.5, burst_prob: float = 0.08,
+                         burst_scale: float = 2.0, seed: int = 0
+                         ) -> List[int]:
+    """Sinusoidal daily load with random bursts (ECW-New-App style)."""
+    rng = np.random.default_rng(seed)
+    t = np.arange(n_slots)
+    vol = base * (1 + amplitude * np.sin(2 * np.pi * t / max(n_slots, 1)))
+    vol *= 1 + 0.1 * rng.standard_normal(n_slots)
+    bursts = rng.random(n_slots) < burst_prob
+    vol[bursts] *= burst_scale
+    return [max(1, int(v)) for v in vol]
+
+
+def dirichlet_domain_trace(n_slots: int, n_domains: int, alpha: float = 1.0,
+                           seed: int = 0) -> Iterator[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    for _ in range(n_slots):
+        yield rng.dirichlet(np.full(n_domains, alpha))

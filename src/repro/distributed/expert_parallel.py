@@ -1,0 +1,105 @@
+"""Expert-parallel MoE (shard_map) — the §Perf-documented alternative to
+tensor-parallel expert FFNs.
+
+Layout: expert weights sharded over `model` on the EXPERT dim (each rank
+owns E/P whole experts at full FFN width); activations replicated across
+`model` (batch-sharded over data as usual).  Each rank dispatches only
+the assignments that target ITS experts, runs them at full width, and
+combines locally; one psum of the compact [B,S,D] output replaces the
+TP formulation's all-reduce of the padded [B,E,C,D] dispatch buffer —
+~E*C/S ≈ 10× fewer collective bytes for qwen3-moe (128e top-8).
+
+Requires num_experts % model_axis == 0 (128/16 ✓, 60 ∤ 16 ✗ — the
+divisibility-aware integration falls back to the TP path otherwise).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.moe import _dispatch_group
+
+
+def apply_moe_expert_parallel(
+        params, x: jax.Array, cfg: ModelConfig, mesh: Mesh,
+        axis: str = "model", capacity_factor: float = 1.25
+) -> Tuple[jax.Array, jax.Array]:
+    """Drop-in for repro.models.moe.apply_moe under a mesh.
+
+    params: the standard MoE params; expert stacks are interpreted as
+    sharded over `axis` on dim 0 (pass in_shardings accordingly).
+    """
+    m = cfg.moe
+    B, S, D = x.shape
+    k, E = m.num_experts_per_tok, m.num_experts
+    n_ranks = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    assert E % n_ranks == 0, (E, n_ranks)
+    E_loc = E // n_ranks
+    C = max(1, math.ceil(S * k / E * capacity_factor))
+    C = min(C, S * k)
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def local(x_l, router, wi_l, wg_l, wo_l):
+        # x_l [B_loc,S,D] (replicated over `axis`); w*_l [E_loc,...]
+        rank = jax.lax.axis_index(axis)
+        logits = (x_l @ router).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_vals, top_idx = jax.lax.top_k(logits, k)
+        gates = jax.nn.softmax(top_vals, axis=-1).astype(x_l.dtype)
+        # keep only assignments owned by this rank; remap to local ids
+        local_idx = top_idx - rank * E_loc
+        mine = (local_idx >= 0) & (local_idx < E_loc)
+        # foreign assignments -> expert id E_loc (trash row), gate 0
+        local_idx = jnp.where(mine, local_idx, E_loc)
+        gates_l = jnp.where(mine, gates, 0)
+
+        def group(xg, ti, g):
+            xe, slot, keep, tok, gate = _dispatch_group(
+                xg, ti, g, E_loc + 1, C)
+            return xe.reshape(E_loc + 1, C, -1)[:E_loc], slot, keep, tok, gate
+
+        xe, slot, keep, tok, gate = jax.vmap(group)(x_l, local_idx, gates_l)
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, wg_l)) * \
+            jnp.einsum("becd,edf->becf", xe, wi_l)
+        ye = jnp.einsum("becf,efd->becd", h, wo_l) \
+            .reshape(x_l.shape[0], E_loc * C, D)
+
+        def combine(ye_g, slot_g, keep_g, tok_g, gate_g):
+            # slots into the padded (E_loc+1)*C space; rows beyond
+            # E_loc*C belong to the trash expert -> contribute 0
+            valid = keep_g & (slot_g < E_loc * C)
+            rows = ye_g[jnp.minimum(slot_g, E_loc * C - 1)]
+            y_sorted = jnp.where(valid[:, None], rows, 0)
+            return jnp.zeros((S, D), x_l.dtype).at[tok_g].add(
+                y_sorted * gate_g[:, None])
+
+        y = jax.vmap(combine)(ye, slot, keep, tok, gate)
+        y = jax.lax.psum(y, axis)                # ONE compact psum
+        # aux loss from the (replicated) router stats
+        me = probs.mean((0, 1))
+        ce = jax.nn.one_hot(top_idx[..., 0], E, dtype=jnp.float32).mean((0, 1))
+        aux = (me * ce).sum() * E * m.router_aux_loss_coef
+        return y, aux
+
+    bspec = batch_axes if batch_axes else None
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(bspec, None, None), P(None, None),
+                  P(axis, None, None), P(axis, None, None),
+                  P(axis, None, None)),
+        out_specs=(P(bspec, None, None), P()),
+        check_vma=False)
+    y, aux = fn(x, params["router"], params["wi"], params["wg"],
+                params["wo"])
+    if m.num_shared_experts:
+        sp = params["shared"]
+        hs = jax.nn.silu(x @ sp["wg"]) * (x @ sp["wi"])
+        y = y + (hs @ sp["wo"]) * jax.nn.sigmoid(
+            (x @ sp["gate"]).astype(jnp.float32)).astype(x.dtype)
+    return y, aux

@@ -1,0 +1,308 @@
+"""Divisibility-aware sharding rules for params, activations and caches.
+
+Philosophy: a tensor dim is sharded on a mesh axis ONLY if its size is
+divisible by that axis — otherwise it silently falls back to replication.
+This single rule makes every assigned architecture lower on the 16x16
+(and 2x16x16) production mesh without per-arch special cases: kv_heads=5
+(hymba) or vocab=51865 (whisper) simply replicate the offending dim.
+
+Axis conventions (see launch/mesh.py):
+  pod    — pod-level data parallelism (multi-pod mesh only)
+  data   — batch (data parallel); also long-context KV sequence sharding
+  model  — tensor parallelism: attention heads / FFN width / vocab
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and n % _axis_size(mesh, axis) == 0
+
+
+def _maybe(n: int, mesh: Mesh, axis: str) -> Optional[str]:
+    return axis if _div(n, mesh, axis) else None
+
+
+def batch_axes(mesh: Mesh, n: int):
+    """Shard a batch dim over (pod, data) — as much of it as divides."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    take = []
+    for a in axes:
+        if n % _axis_size(mesh, a) == 0:
+            take.append(a)
+            n //= _axis_size(mesh, a)
+    return tuple(take) if take else None
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+
+
+_PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    # path-regex -> per-dim axis wishes (None = replicate). Stacked layer
+    # params have a leading cycle dim (never sharded) handled separately.
+    (r"embed$", ("model", None)),
+    (r"pos_embed$", (None, None)),
+    (r"lm_head$", (None, "model")),
+    # attention
+    (r"attn/wq$", (None, "model")),
+    (r"attn/wk$", (None, "model")),
+    (r"attn/wv$", (None, "model")),
+    (r"attn/wo$", ("model", None)),
+    (r"attn/(q_norm|k_norm)$", (None,)),
+    (r"xattn/wq$", (None, "model")),
+    (r"xattn/wk$", (None, "model")),
+    (r"xattn/wv$", (None, "model")),
+    (r"xattn/wo$", ("model", None)),
+    # dense MLP
+    (r"mlp/(wi|wg)$", (None, "model")),
+    (r"mlp/wo$", ("model", None)),
+    # MoE: experts replicated-dim, FFN dim sharded (any expert count works)
+    (r"moe/router$", (None, None)),
+    (r"moe/(wi|wg)$", (None, None, "model")),
+    (r"moe/wo$", (None, "model", None)),
+    (r"moe/shared/(wi|wg)$", (None, "model")),
+    (r"moe/shared/wo$", ("model", None)),
+    (r"moe/shared/gate$", (None, None)),
+    # mamba
+    (r"mamba/in_proj$", (None, "model")),
+    (r"mamba/conv_w$", (None, "model")),
+    (r"mamba/conv_b$", ("model",)),
+    (r"mamba/x_proj$", ("model", None)),
+    (r"mamba/dt_proj$", (None, "model")),
+    (r"mamba/dt_bias$", ("model",)),
+    (r"mamba/A_log$", ("model", None)),
+    (r"mamba/D$", ("model",)),
+    (r"mamba/out_proj$", ("model", None)),
+    # xLSTM cells: head-grouped state math; shard the inner dim where the
+    # head count divides the axis, else replicate (cells are small)
+    (r"cell/(wq|wk|wv|wog)$", (None, "model")),
+    (r"cell/(wi|wf)$", (None, None)),
+    (r"cell/out$", ("model", None)),
+    (r"cell/w$", (None, "model")),
+    (r"cell/r$", ("model",)),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _spec_for(path_s: str, ndim: int, shape, mesh: Mesh,
+              fsdp: bool) -> P:
+    """Match rules; verify divisibility per dim; else replicate.
+
+    fsdp: additionally shard one remaining (non-model-sharded, non-cycle)
+    dim over `data` — ZeRO-3-style; XLA all-gathers at use inside the
+    layer scan and reduce-scatters gradients.
+    """
+    for pat, wishes in _PARAM_RULES:
+        if re.search(pat, path_s):
+            off = ndim - len(wishes)   # leading cycle dim(s) for stacked
+            spec = [None] * ndim
+            for d, wish in enumerate(wishes):
+                if wish is not None and _div(shape[off + d], mesh, wish):
+                    spec[off + d] = wish
+            if fsdp and ndim - off >= 2:
+                # biggest unsharded trailing dim -> data
+                cands = [(shape[i], i) for i in range(off, ndim)
+                         if spec[i] is None and _div(shape[i], mesh, "data")]
+                if cands:
+                    spec[max(cands)[1]] = "data"
+            return P(*spec)
+    return P()          # norms, biases, unmatched -> replicate
+
+
+def param_specs(cfg: ModelConfig, params, mesh: Mesh, fsdp: bool = False,
+                moe_ep: bool = False):
+    """PartitionSpec pytree matching a param pytree (or its ShapeDtype
+    tree). xLSTM per-head cells only shard if head-grouping survives."""
+
+    ax = _axis_size(mesh, "model")
+
+    def _strip_model(spec, ndim, dim_from_end):
+        spec = list(spec) + [None] * (ndim - len(spec))
+        idx = ndim - dim_from_end
+        if spec[idx] == "model":
+            spec[idx] = None
+        return P(*spec)
+
+    def one(path, leaf):
+        path_s = _path_str(path)
+        spec = _spec_for(path_s, leaf.ndim, leaf.shape, mesh, fsdp)
+        # expert parallelism: shard the EXPERT dim over model (full FFN
+        # width per rank) instead of the FFN dim
+        if moe_ep and re.search(r"moe/(wi|wg|wo)$", path_s) \
+                and cfg.moe and cfg.moe.num_experts % ax == 0:
+            spec = list(spec) + [None] * (leaf.ndim - len(spec))
+            off = leaf.ndim - 3
+            spec = P(*([None] * off + ["model", None, None]))
+        # HEAD-ALIGNED attention sharding: shard projections only along
+        # whole heads — a dim like KV*hd=1024 may divide the axis while
+        # splitting individual heads, which forces XLA to reshard (full
+        # all-gathers) at every [B,S,H,hd] reshape.  (§Perf iteration 1.)
+        if re.search(r"(attn|xattn)/(wq)$", path_s) and cfg.num_heads % ax:
+            spec = _strip_model(spec, leaf.ndim, 1)
+        if re.search(r"(attn|xattn)/(wk|wv)$", path_s) \
+                and cfg.num_kv_heads % ax:
+            spec = _strip_model(spec, leaf.ndim, 1)
+        if re.search(r"(attn|xattn)/wo$", path_s) and cfg.num_heads % ax:
+            spec = _strip_model(spec, leaf.ndim, 2)
+        # xLSTM inner dims are head-major [H*hd]; same whole-head rule.
+        if re.search(r"cell/(wq|wk|wv|wog)$", path_s) and cfg.num_heads % ax:
+            spec = _strip_model(spec, leaf.ndim, 1)
+        if re.search(r"cell/out$", path_s) and cfg.num_heads % ax:
+            spec = _strip_model(spec, leaf.ndim, 2)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(cfg: ModelConfig, params, mesh: Mesh, fsdp: bool = False):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, params, mesh, fsdp=fsdp))
+
+
+# ---------------------------------------------------------------------------
+# activation / input / cache rules
+
+
+def token_spec(mesh: Mesh, batch: int, mrope: bool = False) -> P:
+    b = batch_axes(mesh, batch)
+    return P(None, b) if mrope else P(b)
+
+
+def batch_specs(cfg: ModelConfig, batch: dict, mesh: Mesh):
+    """Specs for a model-input batch dict (tokens/positions/embeds)."""
+
+    def one(path, leaf):
+        name = _path_str(path)
+        b = batch_axes(mesh, leaf.shape[0] if leaf.ndim else 1)
+        if "positions" in name and cfg.use_mrope:
+            b = batch_axes(mesh, leaf.shape[1])
+            return P(None, b, None)
+        if leaf.ndim >= 3:          # vision_embeds / encoder_frames [B,S,D]
+            return P(b, None, None)
+        if leaf.ndim == 2:
+            return P(b, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def cache_specs(cfg: ModelConfig, cache, mesh: Mesh,
+                shard_seq: bool = False):
+    """Specs for a decode cache.
+
+    Default: batch -> (pod,data), kv-heads -> model (when divisible).
+    shard_seq (long_500k, batch=1): KV sequence dim -> data instead —
+    flash-decode over a sequence-sharded cache.
+    """
+
+    def one(path, leaf):
+        name = _path_str(path)
+        if leaf.ndim == 0:
+            return P()
+        if re.search(r"/(k|v)$", name):
+            nc, B, S, KV, hd = leaf.shape
+            b = batch_axes(mesh, B)
+            kv_ax = _maybe(KV, mesh, "model")
+            # sequence sharding: long-context caches spread S over the
+            # batch axes (batch=1) and, when kv-heads don't divide the
+            # model axis, over `model` too (flash-decode style).
+            s_axes = []
+            rem = S
+            if shard_seq and b is None:
+                for a in ("pod", "data"):
+                    if a in mesh.axis_names and rem % _axis_size(mesh, a) == 0:
+                        s_axes.append(a)
+                        rem //= _axis_size(mesh, a)
+            if kv_ax is None and _div(rem, mesh, "model") and S > 1024:
+                s_axes.append("model")
+            return P(None, b, tuple(s_axes) if s_axes else None, kv_ax, None)
+        if "mamba/h" in name or re.search(r"/(C)$", name):
+            # [nc,B,inner,state] / [nc,B,H,hd,hd]
+            b = batch_axes(mesh, leaf.shape[1])
+            return P(None, b, *([None] * (leaf.ndim - 2)))
+        if leaf.ndim >= 2:
+            b = batch_axes(mesh, leaf.shape[1])
+            return P(None, b, *([None] * (leaf.ndim - 2)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def maybe_constrain(x, *axes_spec):
+    """Best-effort ``with_sharding_constraint`` using the ambient mesh.
+
+    Each entry is an axis name, a tuple of names, or None; names absent
+    from the ambient mesh are dropped, and if no mesh is active (plain
+    CPU tests) the input is returned untouched.  This lets model code
+    (e.g. the MoE dispatch) pin layouts when — and only when — it runs
+    under a real mesh.
+    """
+    try:
+        names = set()
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None:
+            names |= set(am.axis_names)
+        if not names:
+            from jax._src import mesh as mesh_lib
+            names |= set(mesh_lib.thread_resources.env.physical_mesh.axis_names)
+        if not names:
+            return x
+        spec = []
+        for entry in axes_spec:
+            if entry is None:
+                spec.append(None)
+                continue
+            ent = entry if isinstance(entry, tuple) else (entry,)
+            keep = tuple(a for a in ent if a in names)
+            spec.append(keep if keep else None)
+        if all(s is None for s in spec):
+            return x
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+def local_bytes(tree, spec_tree, mesh: Mesh) -> float:
+    """Per-device bytes of a (ShapeDtype) pytree under a spec pytree."""
+    total = 0.0
+    for leaf, spec in zip(jax.tree.leaves(tree),
+                          jax.tree.leaves(spec_tree, is_leaf=lambda s:
+                                          isinstance(s, P))):
+        shards = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                shards *= _axis_size(mesh, ax)
+        total += leaf.size * leaf.dtype.itemsize / shards
+    return total
+
+
+def logits_spec(cfg: ModelConfig, mesh: Mesh, batch: int) -> P:
+    b = batch_axes(mesh, batch)
+    v = _maybe(cfg.vocab_size, mesh, "model")
+    return P(b, None, v)

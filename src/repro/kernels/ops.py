@@ -1,0 +1,50 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels run with ``interpret=True`` (the
+Pallas interpreter executes the kernel body op-by-op, validating the
+exact TPU program); on a real TPU backend set ``interpret=False`` (the
+default resolves automatically from the platform).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.topk_retrieval import topk_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "q_block", "kv_block", "use_pallas"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    q_block: int = 128, kv_block: int = 128,
+                    use_pallas: bool = True) -> jax.Array:
+    """[B,H,Sq,hd] x [B,KV,Sk,hd]^2 -> [B,H,Sq,hd]."""
+    if not use_pallas:
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 softcap=softcap)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        q_block=q_block, kv_block=kv_block, interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("k", "q_block", "d_block",
+                                             "use_pallas"))
+def retrieval_topk(queries, docs, k: int, *, q_block: int = 128,
+                   d_block: int = 512, use_pallas: bool = True
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Exact top-k inner-product search. [Nq,D] x [Nd,D] -> ([Nq,k],[Nq,k])."""
+    if not use_pallas:
+        return ref.topk_ref(queries, docs, k)
+    return topk_pallas(queries, docs, k, q_block=q_block, d_block=d_block,
+                       interpret=_default_interpret())

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth in tests)."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,                 # [B, H, Sq, hd]
+    k: jax.Array,                 # [B, KV, Sk, hd]
+    v: jax.Array,                 # [B, KV, Sk, hd]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Naive O(S^2) attention with GQA broadcast; f32 softmax."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, G, Sq, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqh,bksh->bkgqs", qf, kf) / math.sqrt(hd)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)      # aligned to the right
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksh->bkgqh", p, vf)
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+def topk_ref(queries: jax.Array, docs: jax.Array, k: int
+             ) -> Tuple[jax.Array, jax.Array]:
+    """queries [Nq, D], docs [Nd, D] -> (scores [Nq,k], idx [Nq,k]);
+    exact inner-product search."""
+    scores = queries.astype(jnp.float32) @ docs.astype(jnp.float32).T
+    return jax.lax.top_k(scores, k)

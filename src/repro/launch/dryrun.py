@@ -1,0 +1,125 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) pair on
+the production mesh, record memory/cost/roofline — no allocation.
+
+MUST set the placeholder-device flag before ANY other import (jax locks
+the device count at first init):
+"""
+import os  # noqa: E402
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import (ARCH_IDS, INPUT_SHAPES, get_config,  # noqa: E402
+                           shape_applicable)
+from repro.launch import roofline  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import build_step  # noqa: E402
+
+
+def run_pair(arch: str, shape_name: str, multi_pod: bool, outdir: str,
+             save: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "x".join(map(str, mesh.devices.shape)),
+           "chips": chips, "status": "SKIP"}
+    if not shape_applicable(cfg, shape):
+        rec["reason"] = "long_500k needs sub-quadratic attention (DESIGN.md)"
+        return _emit(rec, outdir, save)
+    try:
+        t0 = time.time()
+        step, args, in_sh, out_sh, meta = build_step(cfg, shape, mesh)
+        with mesh:
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        stats = roofline.analyze(compiled.as_text())
+        terms = roofline.roofline_terms(
+            stats, model_flops_global=roofline.model_flops(cfg, shape),
+            chips=chips,
+            analytic_bytes=roofline.analytic_memory_bytes(cfg, shape, meta))
+        rec.update(
+            status="OK",
+            meta={k: (round(v, 1) if isinstance(v, float) else v)
+                  for k, v in meta.items()},
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            memory=dict(
+                argument_bytes=int(mem.argument_size_in_bytes),
+                output_bytes=int(mem.output_size_in_bytes),
+                temp_bytes=int(mem.temp_size_in_bytes),
+                alias_bytes=int(mem.alias_size_in_bytes),
+                per_device_total=int(mem.argument_size_in_bytes
+                                     + mem.temp_size_in_bytes),
+            ),
+            cost_analysis_flops=float(cost.get("flops", 0.0)),
+            hlo=dict(
+                dot_flops_per_dev=stats.dot_flops,
+                hbm_bytes_per_dev=stats.hbm_bytes,
+                collective_bytes_per_dev=stats.collective_bytes,
+                per_collective=stats.per_collective,
+                while_trips=stats.while_trips,
+            ),
+            roofline=terms,
+        )
+    except Exception as e:  # record the failure, don't crash the sweep
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return _emit(rec, outdir, save)
+
+
+def _emit(rec: dict, outdir: str, save: bool) -> dict:
+    line = (f"{rec['arch']:20s} {rec['shape']:12s} mesh={rec['mesh']:8s} "
+            f"{rec['status']}")
+    if rec["status"] == "OK":
+        r = rec["roofline"]
+        line += (f" compile={rec['compile_s']:.0f}s"
+                 f" mem/dev={rec['memory']['per_device_total']/2**30:.2f}GiB"
+                 f" compute={r['compute_s']*1e3:.2f}ms"
+                 f" memory={r['memory_s']*1e3:.2f}ms"
+                 f" coll={r['collective_s']*1e3:.2f}ms"
+                 f" dom={r['dominant']}"
+                 f" useful={r['useful_flops_ratio']:.2f}")
+    elif rec["status"] == "FAIL":
+        line += " " + rec["error"][:160]
+    print(line, flush=True)
+    if save:
+        os.makedirs(outdir, exist_ok=True)
+        fn = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}.json"
+        with open(os.path.join(outdir, fn), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default all)")
+    ap.add_argument("--shape", default=None, help="one shape (default all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                run_pair(a, s, mp, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,172 @@
+"""ShapeDtypeStruct input stand-ins + step builders for every
+(architecture x input-shape) pair — the dry-run's contract.
+
+``input_specs(cfg, shape)`` returns the exact batch pytree the step
+consumes, as ShapeDtypeStructs (weak-type-correct, shardable, no device
+allocation).  Modality frontends are stubs per the assignment: VLM
+supplies patch embeddings [B, Nv, D], audio supplies conv-frontend frames
+[B, 1500, D].
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.distributed import sharding as sh
+from repro.models.model import Model
+from repro.train.train_step import make_train_step
+from repro.train.optimizer import adamw_init
+
+S32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+BF16 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.bfloat16)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Model-input ShapeDtypeStructs for one input shape."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.mode == "decode":
+        batch = {"tokens": S32((B, 1))}
+        return batch
+    batch = {"tokens": S32((B, S))}
+    S_total = S
+    if cfg.use_mrope:
+        S_total = S + cfg.num_vision_tokens
+        batch["vision_embeds"] = BF16((B, cfg.num_vision_tokens, cfg.d_model))
+        batch["positions"] = S32((3, B, S_total))
+    else:
+        batch["positions"] = S32((B, S))
+    if cfg.is_encoder_decoder:
+        batch["encoder_frames"] = BF16((B, cfg.encoder_seq_len, cfg.d_model))
+    if shape.mode == "train":
+        batch["labels"] = S32((B, S))
+    return batch
+
+
+def _eval_shape_params(model: Model, max_seq: int):
+    return jax.eval_shape(
+        lambda k: model.init_params(k, max_seq=max_seq),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def _eval_shape_cache(model: Model, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: model.init_cache(batch, max_len, jnp.bfloat16))
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh: Mesh
+               ) -> Tuple[Callable, tuple, tuple, object]:
+    """Returns (step_fn, arg_shape_structs, in_shardings, out_shardings)
+    ready for jax.jit(...).lower(*args)."""
+    # expert parallelism for INFERENCE whenever whole experts divide the
+    # model axis (EXPERIMENTS.md §Perf iteration 2c: 5.2x/20x fewer
+    # collective bytes on qwen3-moe prefill/decode).  Training keeps TP
+    # experts: EP's model-axis-replicated activations cost +11 GiB of
+    # backward residuals there.
+    moe_ep = bool(cfg.moe) and cfg.moe.num_experts % _msize(mesh) == 0 \
+        and shape.mode != "train" 
+    model = Model(cfg, ep_mesh=mesh if moe_ep else None)
+    B, S = shape.global_batch, shape.seq_len
+    batch = input_specs(cfg, shape)
+    batch_spec = sh.batch_specs(cfg, batch, mesh)
+    ns = lambda spec_tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree)
+
+    if shape.mode == "train":
+        max_seq = S + (cfg.num_vision_tokens if cfg.use_mrope else 0)
+        params = _eval_shape_params(model, max_seq)
+        # FSDP (ZeRO-3 over `data`) only when params+AdamW state exceed
+        # the per-device budget under pure tensor parallelism; smaller
+        # models keep TP-only sharding (FSDP's per-cycle all-gathers and
+        # awkward reshards aren't worth it below the memory wall).
+        pbytes = sum(l.size for l in jax.tree.leaves(params)) * (2 + 8)
+        fsdp = pbytes / _msize(mesh) > 8e9
+        pspec = sh.param_specs(cfg, params, mesh, fsdp=fsdp, moe_ep=moe_ep)
+        b_shards = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names and B % _asize(mesh, a) == 0:
+                b_shards *= _asize(mesh, a)
+        b_loc = max(1, B // b_shards)
+        resid_per_seq = (cfg.num_layers // max(1, len(cfg.layer_pattern))
+                         * max_seq * cfg.d_model * 2)
+        microbatch = 1
+        while b_loc // microbatch > 1 and \
+                resid_per_seq * (b_loc // microbatch) > 4e9:
+            microbatch *= 2
+        opt = jax.eval_shape(adamw_init, params)
+        ospec = type(opt)(step=P(), mu=pspec, nu=pspec)
+        step = make_train_step(model, lr=3e-4, remat=True,
+                               microbatch=microbatch)
+        in_sh = (ns(pspec), ns(ospec), ns(batch_spec))
+        out_sh = (ns(pspec), ns(ospec),
+                  ns({"loss": P(), "aux_loss": P(), "total_loss": P()}))
+        meta = {
+            "param_bytes_per_dev": sh.local_bytes(params, pspec, mesh),
+            "batch_per_dev": b_loc,
+            "microbatch": microbatch,
+            "fsdp": fsdp,
+            "vocab_loc": cfg.vocab_size // (_msize(mesh) if
+                                            cfg.vocab_size % _msize(mesh) == 0
+                                            else 1),
+            "kv_shards": 1,
+        }
+        return step, (params, opt, batch), in_sh, out_sh, meta
+
+    # inference shapes
+    max_seq = S + (cfg.num_vision_tokens if cfg.use_mrope else 0)
+    params = _eval_shape_params(model, max_seq)
+    # ZeRO-inference: extra data-axis param sharding for very large models
+    pbytes = sum(l.size * 2 for l in jax.tree.leaves(params))
+    fsdp_inf = pbytes / _msize(mesh) > 4e9
+    pspec = sh.param_specs(cfg, params, mesh, fsdp=fsdp_inf, moe_ep=moe_ep)
+    cache = _eval_shape_cache(model, B, S)
+    cspec = sh.cache_specs(cfg, cache, mesh,
+                           shard_seq=(shape.name == "long_500k"))
+    b_axes = sh.batch_axes(mesh, B)
+    b_shards = 1
+    for a in (b_axes or ()):
+        b_shards *= _asize(mesh, a)
+    kv_shards = 1
+    if cfg.num_kv_heads % _msize(mesh) == 0 or S % _msize(mesh) == 0:
+        kv_shards = _msize(mesh)
+    meta = {
+        "param_bytes_per_dev": sh.local_bytes(params, pspec, mesh),
+        "cache_bytes_per_dev": sh.local_bytes(cache, cspec, mesh),
+        "batch_per_dev": max(1, B // b_shards),
+        "fsdp": fsdp_inf,
+        "vocab_loc": cfg.vocab_size // (_msize(mesh) if
+                                        cfg.vocab_size % _msize(mesh) == 0
+                                        else 1),
+        "kv_shards": kv_shards,
+    }
+
+    if shape.mode == "prefill":
+        def step(params, batch, cache):
+            return model.prefill(params, batch, cache)
+        lspec = P(sh.batch_axes(mesh, B),
+                  "model" if cfg.vocab_size % _msize(mesh) == 0 else None)
+        in_sh = (ns(pspec), ns(batch_spec), ns(cspec))
+        out_sh = (ns(lspec), ns(cspec))
+        return step, (params, batch, cache), in_sh, out_sh, meta
+
+    # decode
+    def step(params, token, cache):
+        return model.decode_step(params, token, cache)
+    tok_spec = P(sh.batch_axes(mesh, B), None)
+    lspec = P(sh.batch_axes(mesh, B),
+              "model" if cfg.vocab_size % _msize(mesh) == 0 else None)
+    in_sh = (ns(pspec), ns(tok_spec), ns(cspec))
+    out_sh = (ns(lspec), ns(cspec))
+    return step, (params, batch["tokens"], cache), in_sh, out_sh, meta
+
+
+def _msize(mesh: Mesh) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+
+def _asize(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)

@@ -1,0 +1,68 @@
+"""Distributed training launcher.
+
+On real hardware this runs the pjit'd train step on the production mesh;
+on this CPU container use --host-mesh (1-device) with a reduced config:
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b \
+        --smoke --steps 20 --batch 8 --seq 64
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import Model
+from repro.train.checkpoint import save
+from repro.train.optimizer import cosine_schedule
+from repro.train.train_step import init_opt_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="16x16 mesh (requires 256 devices)")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_production_mesh() if args.production_mesh else \
+        make_host_mesh(data=len(jax.devices()))
+    model = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key, max_seq=args.seq)
+    opt = init_opt_state(params)
+    lr = cosine_schedule(args.lr, warmup=max(2, args.steps // 10),
+                         total=args.steps)
+    step_fn = jax.jit(make_train_step(model, lr=lr, remat=not args.smoke,
+                                      microbatch=args.microbatch))
+    B, S = args.batch, args.seq
+    with mesh:
+        t0 = time.time()
+        for step in range(args.steps):
+            k = jax.random.fold_in(key, step)
+            toks = jax.random.randint(k, (B, S + 1), 0, cfg.vocab_size)
+            batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+                     "positions": jnp.broadcast_to(
+                         jnp.arange(S, dtype=jnp.int32), (B, S))}
+            params, opt, m = step_fn(params, opt, batch)
+            if step % 5 == 0 or step == args.steps - 1:
+                print(f"step {step:4d}  loss {float(m['loss']):.4f}  "
+                      f"({time.time()-t0:.1f}s)", flush=True)
+    if args.ckpt:
+        save(args.ckpt, params)
+        print("saved", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.metrics.text import (bertscore, bleu4, meteor,  # noqa: F401
+                                rouge_l, rouge_n)

@@ -1,0 +1,2 @@
+"""Pure-JAX model definitions (param pytrees, no framework dependency)."""
+from repro.models.model import Model  # noqa: F401

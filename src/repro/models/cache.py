@@ -1,0 +1,119 @@
+"""KV / recurrent-state cache construction and position bookkeeping.
+
+Cache layout (one entry per pattern slot, stacked over cycles):
+
+  cache = {
+    "length": int32 scalar           # tokens already absorbed
+    "slots": {slot_name: {...}},     # per-kind, leading dim = n_cycles
+    "enc": {"k","v"}                 # whisper cross-attn K/V (stacked)
+  }
+
+Full-attention slots keep [nc, B, S_max, KV, hd]; sliding-window slots
+keep a *rolling* [nc, B, W, KV, hd] buffer (slot j holds the latest
+position p with p % W == j); recurrent slots keep their fixed-size
+states.  Slot validity/positions are derived from ``length`` instead of
+being stored, so the cache is a pure function of its arrays.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm
+
+
+def full_kv_positions(length: jax.Array, s_max: int) -> jax.Array:
+    """[S] absolute positions; -1 for unwritten slots."""
+    i = jnp.arange(s_max, dtype=jnp.int32)
+    return jnp.where(i < length, i, -1)
+
+
+def rolling_kv_positions(length: jax.Array, window: int) -> jax.Array:
+    """[W] absolute position held by each rolling slot; negative = empty."""
+    j = jnp.arange(window, dtype=jnp.int32)
+    # largest p < length with p % W == j  (floor-div is floor for negatives)
+    return j + window * jnp.floor_divide(length - 1 - j, window)
+
+
+def slot_kinds(cfg: ModelConfig):
+    """[(slot_name, kind)] for the decoder stack."""
+    return [(f"s{i}_{k}", k) for i, k in enumerate(cfg.layer_pattern)]
+
+
+def n_cycles(cfg: ModelConfig) -> int:
+    P = len(cfg.layer_pattern)
+    assert cfg.num_layers % P == 0, (cfg.name, cfg.num_layers, P)
+    return cfg.num_layers // P
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    nc = n_cycles(cfg)
+    hd = cfg.resolved_head_dim
+    KV = cfg.num_kv_heads
+    W = cfg.sliding_window
+
+    def kv(buf_len):
+        return {
+            "k": jnp.zeros((nc, batch, buf_len, KV, hd), dtype),
+            "v": jnp.zeros((nc, batch, buf_len, KV, hd), dtype),
+        }
+
+    def stacked(tree):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (nc,) + a.shape), tree)
+
+    slots = {}
+    for name, kind in slot_kinds(cfg):
+        if kind == "attn":
+            slots[name] = kv(max_len)
+        elif kind == "local":
+            slots[name] = kv(min(W, max_len))
+        elif kind == "hymba":
+            slots[name] = dict(kv(min(W or max_len, max_len)),
+                               mamba=stacked(ssm.mamba_init_state(cfg, batch, dtype)))
+        elif kind == "mlstm":
+            slots[name] = stacked(ssm.mlstm_init_state(cfg, batch))
+        elif kind == "slstm":
+            slots[name] = stacked(ssm.slstm_init_state(cfg, batch))
+        else:
+            raise ValueError(kind)
+    cache = {"length": jnp.zeros((), jnp.int32),
+             # per-row first valid absolute position (left-padded batches)
+             "first": jnp.zeros((batch,), jnp.int32),
+             "slots": slots}
+    if cfg.is_encoder_decoder:
+        cache["enc"] = {
+            "k": jnp.zeros((nc, batch, cfg.encoder_seq_len, KV, hd), dtype),
+            "v": jnp.zeros((nc, batch, cfg.encoder_seq_len, KV, hd), dtype),
+        }
+    return cache
+
+
+def write_seq(kv_cache: dict, k: jax.Array, v: jax.Array,
+              start: jax.Array) -> dict:
+    """Write a [B,S,KV,hd] prefill segment at absolute position ``start``
+    into a single-cycle cache slice [B,L,KV,hd] (full or rolling)."""
+    L = kv_cache["k"].shape[1]
+    S = k.shape[1]
+    if S >= L:
+        # rolling buffer smaller than the segment: keep the last L tokens,
+        # placed so that slot j holds position p with p % L == j.
+        kk, vv = k[:, S - L:], v[:, S - L:]
+        idx = (start + S - L + jnp.arange(L)) % L      # permutation of [0,L)
+        return {"k": kv_cache["k"].at[:, idx].set(kk),
+                "v": kv_cache["v"].at[:, idx].set(vv)}
+    idx = (start + jnp.arange(S)) % L
+    return {"k": kv_cache["k"].at[:, idx].set(k),
+            "v": kv_cache["v"].at[:, idx].set(v)}
+
+
+def write_token(kv_cache: dict, k: jax.Array, v: jax.Array,
+                pos: jax.Array) -> dict:
+    """Write a single [B,1,KV,hd] token at absolute position ``pos``."""
+    L = kv_cache["k"].shape[1]
+    j = pos % L
+    return {"k": jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], k, j, 1),
+            "v": jax.lax.dynamic_update_slice_in_dim(kv_cache["v"], v, j, 1)}

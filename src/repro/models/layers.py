@@ -1,0 +1,341 @@
+"""Core transformer layers: norms, positional embeddings, MLPs, attention.
+
+All layers are pure functions over param dicts.  Attention is implemented
+as a blocked, online-softmax ("flash-style") computation in plain jnp so
+it lowers on any backend without materializing the S x S score matrix;
+the Pallas TPU kernel in ``repro.kernels`` is a drop-in fast path for the
+same math (see ``repro.kernels.ops``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# initializers
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def init_norm(cfg: ModelConfig, dtype):
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), dtype),
+                "bias": jnp.zeros((cfg.d_model,), dtype)}
+    return {}  # nonparametric
+
+
+def apply_norm(params, x: jax.Array, cfg: ModelConfig, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        x32 = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
+        return x32.astype(dt) * params["scale"]
+    # layernorm / nonparametric layernorm
+    mu = jnp.mean(x32, -1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), -1, keepdims=True)
+    x32 = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    if cfg.norm_type == "layernorm":
+        x32 = x32 * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return x32.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (incl. Qwen2-VL M-RoPE)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """[head_dim/2] inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float,
+                mrope_sections: Tuple[int, ...] = ()) -> jax.Array:
+    """Angles [..., S, head_dim/2] from positions.
+
+    positions: [B, S] for standard RoPE, or [3, B, S] (t/h/w) for M-RoPE.
+    """
+    inv = rope_frequencies(head_dim, theta)  # [hd/2]
+    if positions.ndim == 2:
+        return positions[..., None].astype(jnp.float32) * inv  # [B,S,hd/2]
+    # M-RoPE: positions [3,B,S]; section s of the hd/2 freq dims takes its
+    # angle from axis s's position index.
+    assert sum(mrope_sections) == head_dim // 2, (mrope_sections, head_dim)
+    ang = positions[..., None].astype(jnp.float32) * inv  # [3,B,S,hd/2]
+    parts = []
+    start = 0
+    for i, sec in enumerate(mrope_sections):
+        parts.append(ang[i, :, :, start:start + sec])
+        start += sec
+    return jnp.concatenate(parts, axis=-1)  # [B,S,hd/2]
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x: [B, S, H, hd]; angles: [B, S, hd/2] -> rotated x (interleaved pairs
+    as (x1, x2) = first/second half convention, matching Llama)."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(dt)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    out = jnp.zeros((n, d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+
+
+def init_mlp(key, cfg: ModelConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type in ("swiglu", "gelu_glu"):
+        return {"wi": dense_init(ks[0], d, f, dtype),
+                "wg": dense_init(ks[1], d, f, dtype),
+                "wo": dense_init(ks[2], f, d, dtype)}
+    if cfg.mlp_type in ("relu2", "gelu"):
+        return {"wi": dense_init(ks[0], d, f, dtype),
+                "wo": dense_init(ks[1], f, d, dtype)}
+    return {}
+
+
+def apply_mlp(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ params["wg"]) * (x @ params["wi"])
+    elif cfg.mlp_type == "gelu_glu":
+        h = jax.nn.gelu(x @ params["wg"]) * (x @ params["wi"])
+    elif cfg.mlp_type == "relu2":
+        h = jnp.square(jax.nn.relu(x @ params["wi"]))
+    elif cfg.mlp_type == "gelu":
+        h = jax.nn.gelu(x @ params["wi"])
+    else:
+        return jnp.zeros_like(x)
+    return h @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# blocked flash-style attention (pure jnp; lowers on any backend)
+
+
+def _softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+NEG_INF = -1e30
+
+
+def flash_attention(
+    q: jax.Array,                 # [B, Sq, H, hd]
+    k: jax.Array,                 # [B, Sk, KV, hd]
+    v: jax.Array,                 # [B, Sk, KV, hd]
+    q_positions: jax.Array,       # [B, Sq] int32 absolute positions
+    kv_positions: jax.Array,      # [B, Sk] int32 (NEG for invalid slots)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_block: int = 512,
+    kv_block: int = 512,
+    causal_skip: bool = True,
+) -> jax.Array:
+    """Blocked online-softmax attention with GQA, position-based masking.
+
+    Masking is position-based so the same function serves training,
+    prefill, rolling-window caches (kv_positions carry absolute positions)
+    and padded decode.  A kv slot with position < 0 is invalid.
+
+    ``causal_skip``: when True and causal, KV blocks entirely in the
+    future of a Q block are skipped via lax.cond — halving prefill FLOPs.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV  # query heads per kv head
+    scale = 1.0 / math.sqrt(hd)
+
+    # GQA via repetition: expand K/V to the full head count up front so
+    # every attention tensor keeps ONE flat head dim.  A KV/G head split
+    # would break SPMD head-sharding propagation (XLA inserts full
+    # all-gathers at the reshape) — see EXPERIMENTS.md §Perf iteration 1.
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+
+    # pad sequence dims to block multiples
+    pq = (-Sq) % q_block
+    pk = (-Sk) % kv_block
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pq)), constant_values=0)
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pk)), constant_values=-1)
+    Sq_p, Sk_p = q.shape[1], k.shape[1]
+    nq, nk = Sq_p // q_block, Sk_p // kv_block
+
+    # sequence-only reshapes (head dim untouched)
+    qb = q.reshape(B, nq, q_block, H, hd)
+    kb = k.reshape(B, nk, kv_block, H, hd)
+    vb = v.reshape(B, nk, kv_block, H, hd)
+    qpos = q_positions.reshape(B, nq, q_block)
+    kpos = kv_positions.reshape(B, nk, kv_block)
+
+    def q_body(_, qi):
+        qq, qp = qb[:, qi], qpos[:, qi]          # [B,qb,H,hd], [B,qb]
+
+        def kv_step(carry, kj):
+            acc, m, l = carry
+            kk, vv = kb[:, kj], vb[:, kj]
+            # barrier: stops XLA from precomputing every block's mask as
+            # one giant [nq,nk,...] constant tensor outside the loops
+            kp, qp_ = jax.lax.optimization_barrier((kpos[:, kj], qp))
+
+            # checkpointed so backward RECOMPUTES s/p per tile instead of
+            # saving O(S^2) softmax residuals — the flash-backward trick
+            @jax.checkpoint
+            def compute(acc, m, l, qq, kk, vv):
+                s = jnp.einsum("bqhd,bshd->bhqs", qq.astype(jnp.float32),
+                               kk.astype(jnp.float32)) * scale
+                s = _softcap(s, softcap)
+                mask = kp[:, None, None, :] >= 0
+                if causal:
+                    mask &= kp[:, None, None, :] <= qp_[:, None, :, None]
+                if window is not None:
+                    mask &= qp_[:, None, :, None] - kp[:, None, None, :] < window
+                s = jnp.where(mask, s, NEG_INF)
+                m_new = jnp.maximum(m, s.max(-1))
+                alpha = jnp.exp(m - m_new)
+                p = jnp.exp(s - m_new[..., None])
+                l_new = l * alpha + p.sum(-1)
+                acc_new = acc * alpha[..., None] + jnp.einsum(
+                    "bhqs,bshd->bhqd", p, vv.astype(jnp.float32))
+                return acc_new, m_new, l_new
+
+            if causal and causal_skip:
+                # whole KV block in the strict future of the whole Q block?
+                skip = kp.min() > qp_.max()
+                acc, m, l = jax.lax.cond(
+                    skip, lambda a, mm, ll, *_: (a, mm, ll), compute,
+                    acc, m, l, qq, kk, vv)
+            else:
+                acc, m, l = compute(acc, m, l, qq, kk, vv)
+            return (acc, m, l), None
+
+        acc0 = jnp.zeros((B, H, q_block, hd), jnp.float32)
+        m0 = jnp.full((B, H, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_block), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]     # [B,H,qb,hd]
+        return _, out.transpose(0, 2, 1, 3)               # [B,qb,H,hd]
+
+    _, outs = jax.lax.scan(q_body, None, jnp.arange(nq))  # [nq,B,qb,H,hd]
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq_p, H, hd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,                 # [B, 1, H, hd]
+    k_cache: jax.Array,           # [B, S, KV, hd]
+    v_cache: jax.Array,           # [B, S, KV, hd]
+    q_position: jax.Array,        # [B] int32
+    kv_positions: jax.Array,      # [B, S] int32, -1 for empty slots
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Single-token attention over a (possibly rolling) KV cache.
+
+    Unblocked: the score tensor is [B, H, S] which is small even at 500k.
+    """
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qh = q[:, 0].reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qh, k_cache.astype(jnp.float32)) * scale
+    s = _softcap(s, softcap)
+    mask = (kv_positions >= 0) & (kv_positions <= q_position[:, None])
+    if window is not None:
+        mask &= q_position[:, None] - kv_positions < window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (projections + rope + flash / decode attention)
+
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.num_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.num_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.num_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.num_heads * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _headwise_rms(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    x32 = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
+    return (x32 * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def qkv_project(params, x: jax.Array, cfg: ModelConfig,
+                angles: Optional[jax.Array]):
+    """x: [B,S,D] -> q [B,S,H,hd], k/v [B,S,KV,hd] (rope applied)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(B, S, cfg.num_heads, hd)
+    k = (x @ params["wk"]).reshape(B, S, cfg.num_kv_heads, hd)
+    v = (x @ params["wv"]).reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = _headwise_rms(q, params["q_norm"])
+        k = _headwise_rms(k, params["k_norm"])
+    if angles is not None:
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+    return q, k, v
+
+
+def attention_out(params, attn: jax.Array) -> jax.Array:
+    B, S = attn.shape[:2]
+    return attn.reshape(B, S, -1) @ params["wo"]

@@ -1,0 +1,462 @@
+"""Composable decoder (+optional encoder) model built from a ModelConfig.
+
+The layer stack is organized as *pattern cycles*: the config's
+``layer_pattern`` (e.g. ("local","attn") for Gemma-2, ("mlstm","slstm")
+for xLSTM) is cycled num_layers/len(pattern) times.  Per-slot params are
+stacked over cycles and the stack runs as one ``lax.scan`` over cycles,
+keeping HLO size O(pattern) instead of O(layers) — essential for the
+512-chip dry-run compile times.
+
+Entry points (all pure functions of the param pytree):
+
+  forward(params, batch)                 -> (logits, aux)   # train/eval
+  prefill(params, batch, cache)          -> (last_logits, cache)
+  decode_step(params, token, cache, ...) -> (logits, cache) # serve_step
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import cache as cache_lib
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, moe_capacity_factor: float = 1.25,
+                 ep_mesh=None):
+        self.cfg = cfg
+        # capacity factor for MoE dispatch; pass float(num_experts) for a
+        # dropless guarantee (capacity == tokens*k), cheap at decode sizes.
+        self.moe_cf = moe_capacity_factor
+        # expert parallelism: pass the mesh to run MoE layers as
+        # shard_map with expert-sharded weights (requires E % model == 0
+        # — see distributed/expert_parallel.py); None = TP experts.
+        self.ep_mesh = ep_mesh
+        self.slots = cache_lib.slot_kinds(cfg)
+        self.n_cycles = cache_lib.n_cycles(cfg)
+
+    # ------------------------------------------------------------------ init
+
+    def _init_block(self, key, kind: str, dtype, cross: bool, with_mlp: bool):
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        p = {}
+        if kind in ("attn", "local", "enc"):
+            p["ln1"] = L.init_norm(cfg, dtype)
+            p["attn"] = L.init_attention(ks[0], cfg, dtype)
+        elif kind == "hymba":
+            p["ln1"] = L.init_norm(cfg, dtype)
+            p["attn"] = L.init_attention(ks[0], cfg, dtype)
+            p["mamba"] = ssm.init_mamba(ks[1], cfg, dtype)
+            p["bn_a"] = L.init_norm(cfg, dtype)   # per-branch output norms
+            p["bn_m"] = L.init_norm(cfg, dtype)
+        elif kind == "mlstm":
+            p["ln1"] = L.init_norm(cfg, dtype)
+            p["cell"] = ssm.init_mlstm(ks[0], cfg, dtype)
+        elif kind == "slstm":
+            p["ln1"] = L.init_norm(cfg, dtype)
+            p["cell"] = ssm.init_slstm(ks[0], cfg, dtype)
+        else:
+            raise ValueError(kind)
+        if cross:
+            p["lnx"] = L.init_norm(cfg, dtype)
+            p["xattn"] = L.init_attention(ks[2], cfg, dtype)
+        if with_mlp and kind not in ("mlstm", "slstm") and cfg.mlp_type != "none":
+            p["ln2"] = L.init_norm(cfg, dtype)
+            if cfg.moe is not None:
+                p["moe"] = moe_lib.init_moe(ks[3], cfg, dtype)
+            else:
+                p["mlp"] = L.init_mlp(ks[3], cfg, dtype)
+        return p
+
+    def init_params(self, key, max_seq: int = 2048) -> dict:
+        cfg = self.cfg
+        dtype = _dt(cfg)
+        k_embed, k_blocks, k_head, k_enc, k_pos = jax.random.split(key, 5)
+        params = {"embed": L.embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype)}
+        if cfg.pos_embedding == "learned":
+            params["pos_embed"] = L.embed_init(k_pos, max_seq, cfg.d_model, dtype)
+        # decoder blocks, stacked over cycles
+        blocks = {}
+        slot_keys = jax.random.split(k_blocks, len(self.slots))
+        for (name, kind), sk in zip(self.slots, slot_keys):
+            cyc_keys = jax.random.split(sk, self.n_cycles)
+            init_one = functools.partial(
+                self._init_block, kind=kind, dtype=dtype,
+                cross=cfg.is_encoder_decoder, with_mlp=True)
+            blocks[name] = jax.vmap(init_one)(cyc_keys)
+        params["blocks"] = blocks
+        params["final_norm"] = L.init_norm(cfg, dtype)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.dense_init(k_head, cfg.d_model, cfg.vocab_size, dtype)
+        # encoder (whisper)
+        if cfg.is_encoder_decoder:
+            enc_keys = jax.random.split(k_enc, cfg.num_encoder_layers)
+            init_enc = functools.partial(self._init_block, kind="enc",
+                                         dtype=dtype, cross=False, with_mlp=True)
+            params["encoder"] = {
+                "blocks": jax.vmap(init_enc)(enc_keys),
+                "final_norm": L.init_norm(cfg, dtype),
+            }
+        return params
+
+    # ------------------------------------------------------------- embedding
+
+    def _embed(self, params, tokens, positions, vision_embeds=None):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        if cfg.scale_embedding:
+            x = x * jnp.sqrt(jnp.asarray(cfg.d_model, x.dtype))
+        if vision_embeds is not None:
+            x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+        if cfg.pos_embedding == "learned":
+            pos = positions if positions.ndim == 2 else positions[0]
+            tbl = params["pos_embed"]
+            x = x + tbl[jnp.clip(pos, 0, tbl.shape[0] - 1)]
+        elif cfg.pos_embedding == "sinusoidal":
+            pos = positions if positions.ndim == 2 else positions[0]
+            x = x + L.sinusoidal_positions(int(pos.shape[-1]), cfg.d_model
+                                           ).astype(x.dtype)[None]
+        return x
+
+    def _angles(self, positions, seq_len):
+        cfg = self.cfg
+        if cfg.pos_embedding != "rope":
+            return None
+        return L.rope_angles(positions, cfg.resolved_head_dim, cfg.rope_theta,
+                             cfg.mrope_sections if cfg.use_mrope else ())
+
+    # --------------------------------------------------------------- encoder
+
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        """frames: [B, enc_len, D] precomputed conv-frontend embeddings."""
+        cfg = self.cfg
+        B, S, _ = frames.shape
+        x = frames.astype(_dt(cfg)) + L.sinusoidal_positions(
+            S, cfg.d_model).astype(_dt(cfg))[None]
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+        def body(x, p):
+            h = L.apply_norm(p["ln1"], x, cfg)
+            q, k, v = L.qkv_project(p["attn"], h, cfg, None)
+            a = L.flash_attention(q, k, v, pos, pos, causal=False,
+                                  q_block=min(512, S), kv_block=min(512, S))
+            x = x + L.attention_out(p["attn"], a)
+            h = L.apply_norm(p["ln2"], x, cfg)
+            x = x + L.apply_mlp(p["mlp"], h, cfg)
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"])
+        return L.apply_norm(params["encoder"]["final_norm"], x, cfg)
+
+    # ---------------------------------------------------------- block bodies
+
+    def _attn_sublayer(self, p, x, kind, qpos, kpos, angles, kv_slice, mode,
+                       start, first=None):
+        """Self-attention sublayer. Returns (delta_x, new_kv_slice)."""
+        cfg = self.cfg
+        h = L.apply_norm(p["ln1"], x, cfg)
+        q, k, v = L.qkv_project(p["attn"], h, cfg, angles)
+        window = cfg.sliding_window if kind in ("local", "hymba") else None
+        if mode == "decode":
+            new_kv = cache_lib.write_token(kv_slice, k, v, start)
+            L_buf = new_kv["k"].shape[1]
+            # a buffer is rolling iff it equals the window (i.e. smaller
+            # than max context); otherwise slot index == absolute position
+            if window is not None and L_buf == window:
+                kv_pos = cache_lib.rolling_kv_positions(start + 1, L_buf)
+            else:
+                kv_pos = cache_lib.full_kv_positions(start + 1, L_buf)
+            kv_pos = jnp.broadcast_to(kv_pos, (x.shape[0], L_buf))
+            if first is not None:   # mask left-padding slots
+                kv_pos = jnp.where(kv_pos >= first[:, None], kv_pos, -1)
+            a = L.decode_attention(q, new_kv["k"], new_kv["v"],
+                                   qpos[:, 0], kv_pos,
+                                   window=window, softcap=cfg.attn_logit_softcap)
+        else:
+            S = x.shape[1]
+            a = L.flash_attention(
+                q, k, v, qpos, kpos, causal=True, window=window,
+                softcap=cfg.attn_logit_softcap,
+                q_block=min(512, S), kv_block=min(512, S))
+            new_kv = None
+            if kv_slice is not None:  # prefill: persist roped K/V
+                new_kv = cache_lib.write_seq(kv_slice, k, v, start)
+        return L.attention_out(p["attn"], a), new_kv
+
+    def _cross_sublayer(self, p, x, enc_out, enc_kv, mode):
+        """Whisper cross-attention. enc_out used at prefill (computes K/V);
+        enc_kv reused at decode."""
+        cfg = self.cfg
+        h = L.apply_norm(p["lnx"], x, cfg)
+        B, Sq = h.shape[:2]
+        hd = cfg.resolved_head_dim
+        q = (h @ p["xattn"]["wq"]).reshape(B, Sq, cfg.num_heads, hd)
+        if enc_kv is None:
+            Se = enc_out.shape[1]
+            k = (enc_out @ p["xattn"]["wk"]).reshape(B, Se, cfg.num_kv_heads, hd)
+            v = (enc_out @ p["xattn"]["wv"]).reshape(B, Se, cfg.num_kv_heads, hd)
+        else:
+            k, v = enc_kv["k"], enc_kv["v"]
+            Se = k.shape[1]
+        pos_q = jnp.zeros((B, Sq), jnp.int32)
+        pos_k = jnp.zeros((B, Se), jnp.int32)
+        if Sq == 1:
+            a = L.decode_attention(q, k, v, pos_q[:, 0], pos_k)
+        else:
+            a = L.flash_attention(q, k, v, pos_q, pos_k, causal=False,
+                                  q_block=min(512, Sq), kv_block=min(512, Se))
+        return L.attention_out(p["xattn"], a), {"k": k, "v": v}
+
+    def _mlp_sublayer(self, p, x):
+        cfg = self.cfg
+        if "moe" in p:
+            h = L.apply_norm(p["ln2"], x, cfg)
+            if self.ep_mesh is not None:
+                from repro.distributed.expert_parallel import \
+                    apply_moe_expert_parallel
+                y, aux = apply_moe_expert_parallel(
+                    p["moe"], h, cfg, self.ep_mesh,
+                    capacity_factor=self.moe_cf)
+            else:
+                y, aux = moe_lib.apply_moe(p["moe"], h, cfg,
+                                           capacity_factor=self.moe_cf)
+            return y, aux
+        if "mlp" in p:
+            h = L.apply_norm(p["ln2"], x, cfg)
+            return L.apply_mlp(p["mlp"], h, cfg), 0.0
+        return jnp.zeros_like(x), 0.0
+
+    def _apply_block(self, p, x, kind, ctx, cache_slice, mode):
+        """One layer. Returns (x, new_cache_slice, aux)."""
+        cfg = self.cfg
+        aux = 0.0
+        new_slice = None
+        if kind in ("attn", "local"):
+            kv = cache_slice
+            da, new_kv = self._attn_sublayer(
+                p, x, kind, ctx["qpos"], ctx["kpos"], ctx["angles"], kv, mode,
+                ctx["start"], ctx.get("first"))
+            # checkpoint_name lets the remat policy SAVE this psum
+            # output instead of re-all-reducing it in the backward
+            # recompute (§Perf iteration 4)
+            da = jax.ad_checkpoint.checkpoint_name(da, "sublayer_out")
+            x = x + da
+            new_slice = new_kv
+        elif kind == "hymba":
+            kv = {k: cache_slice[k] for k in ("k", "v")} if cache_slice else None
+            h = L.apply_norm(p["ln1"], x, cfg)
+            # attention branch (bypasses ln1 in _attn_sublayer; replicate here)
+            q, k, v = L.qkv_project(p["attn"], h, cfg, ctx["angles"])
+            if mode == "decode":
+                new_kv = cache_lib.write_token(kv, k, v, ctx["start"])
+                W = new_kv["k"].shape[1]
+                kv_pos = jnp.broadcast_to(
+                    cache_lib.rolling_kv_positions(ctx["start"] + 1, W),
+                    (x.shape[0], W))
+                if ctx.get("first") is not None:
+                    kv_pos = jnp.where(kv_pos >= ctx["first"][:, None],
+                                       kv_pos, -1)
+                a = L.decode_attention(q, new_kv["k"], new_kv["v"],
+                                       ctx["qpos"][:, 0], kv_pos,
+                                       window=cfg.sliding_window)
+                mo, mstate = ssm.mamba_step(p["mamba"], h, cfg, cache_slice["mamba"])
+            else:
+                S = x.shape[1]
+                a = L.flash_attention(q, k, v, ctx["qpos"], ctx["kpos"],
+                                      causal=True, window=cfg.sliding_window,
+                                      q_block=min(512, S), kv_block=min(512, S))
+                new_kv = cache_lib.write_seq(kv, k, v, ctx["start"]) if kv else None
+                mo, mstate = ssm.mamba_forward(
+                    p["mamba"], h, cfg,
+                    None if cache_slice is None else cache_slice["mamba"])
+            ao = L.attention_out(p["attn"], a)
+            fused = 0.5 * (L.apply_norm(p["bn_a"], ao, cfg)
+                           + L.apply_norm(p["bn_m"], mo, cfg))
+            x = x + fused
+            if cache_slice is not None:
+                new_slice = dict(new_kv, mamba=mstate)
+        elif kind in ("mlstm", "slstm"):
+            h = L.apply_norm(p["ln1"], x, cfg)
+            # chunkwise mLSTM for sequences: exact, MXU-shaped, and
+            # O(S/chunk) backward snapshots (the per-step scan would
+            # checkpoint the [B,H,hd,hd] matrix state EVERY step —
+            # ~68 GiB/layer at 4k tokens; §Perf "beyond-paper" item 5)
+            fwd = ssm.mlstm_forward_chunked if kind == "mlstm" \
+                else ssm.slstm_forward
+            step = ssm.mlstm_step if kind == "mlstm" else ssm.slstm_step
+            if mode == "decode":
+                y, st = step(p["cell"], h, cfg, cache_slice)
+            else:
+                y, st = fwd(p["cell"], h, cfg, cache_slice)
+            x = x + y
+            if cache_slice is not None:
+                new_slice = st
+        else:
+            raise ValueError(kind)
+        # cross-attention (whisper decoder)
+        if cfg.is_encoder_decoder:
+            enc_kv = None if cache_slice is None or mode != "decode" \
+                else ctx["enc_slice"]
+            dx, enc_kv_new = self._cross_sublayer(p, x, ctx.get("enc_out"),
+                                                  enc_kv, mode)
+            x = x + dx
+            ctx["_enc_kv_new"] = enc_kv_new
+        dm, aux = self._mlp_sublayer(p, x)
+        dm = jax.ad_checkpoint.checkpoint_name(dm, "sublayer_out")
+        x = x + dm
+        return x, new_slice, aux
+
+    # ------------------------------------------------------------- sequence
+
+    def _run_stack(self, params, x, ctx, cache, mode, remat=False):
+        """Scan the pattern-cycle stack. cache may be None (pure train)."""
+        cfg = self.cfg
+        have_cache = cache is not None
+
+        def cycle_body(carry, xs):
+            x, aux = carry
+            # pin the residual stream to (batch-sharded, D-replicated):
+            # FSDP'd projections otherwise tempt XLA into resharding
+            # activations to (batch-replicated, D-sharded) layouts
+            from repro.distributed.sharding import maybe_constrain
+            x = maybe_constrain(x, ("pod", "data"), None, None)
+            blk_params, cache_slices = xs
+            new_slices = {}
+            for name, kind in self.slots:
+                cs = cache_slices[name] if have_cache else None
+                if cfg.is_encoder_decoder and have_cache:
+                    ctx["enc_slice"] = cache_slices["enc"]
+                x, ns, a = self._apply_block(blk_params[name], x, kind, ctx,
+                                             cs, mode)
+                if have_cache:
+                    new_slices[name] = ns
+                aux = aux + a
+            if cfg.is_encoder_decoder and have_cache:
+                new_slices["enc"] = ctx.pop("_enc_kv_new")
+            elif cfg.is_encoder_decoder:
+                ctx.pop("_enc_kv_new", None)
+            return (x, aux), (new_slices if have_cache else None)
+
+        # NOTE §Perf iteration 4 (refuted trade): a remat policy saving
+        # the "sublayer_out" psum results cuts collectives another 12%
+        # but costs +4 GiB/device (17.5 > 16 GiB HBM) — plain remat wins.
+        body = jax.checkpoint(cycle_body) if remat else cycle_body
+        xs = (params["blocks"],
+              cache["slots"] | ({"enc": cache["enc"]} if cfg.is_encoder_decoder
+                                else {}) if have_cache else None)
+        if not have_cache:
+            xs = (params["blocks"], None)
+        (x, aux), new_cache_slices = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), xs)
+        new_cache = None
+        if have_cache:
+            enc = new_cache_slices.pop("enc", None)
+            new_cache = dict(cache, slots=new_cache_slices)
+            if enc is not None:
+                new_cache["enc"] = enc
+        return x, aux, new_cache
+
+    def lm_head(self, params):
+        return params["embed"].T if self.cfg.tie_embeddings \
+            else params["lm_head"]
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = L.apply_norm(params["final_norm"], x, cfg)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = x @ head
+        if cfg.final_logit_softcap:
+            logits = (cfg.final_logit_softcap
+                      * jnp.tanh(logits.astype(jnp.float32)
+                                 / cfg.final_logit_softcap))
+        return logits
+
+    # ---------------------------------------------------------------- public
+
+    def forward(self, params, batch: dict, remat: bool = False,
+                return_features: bool = False
+                ) -> Tuple[jax.Array, jax.Array]:
+        """Training/eval forward over a full sequence.
+
+        batch: tokens [B,S], positions [B,S] (or [3,B,S] M-RoPE), optional
+        vision_embeds [B,Nv,D] (prepended), encoder_frames [B,Se,D].
+        Returns (logits [B,S_total,V], aux_loss scalar) — or the
+        pre-head features [B,S_total,D] when return_features=True (the
+        fused chunked cross-entropy consumes those directly).
+        """
+        cfg = self.cfg
+        tokens, positions = batch["tokens"], batch["positions"]
+        x = self._embed(params, tokens, positions,
+                        batch.get("vision_embeds"))
+        S = x.shape[1]
+        pos2d = positions if positions.ndim == 2 else positions[0]
+        ctx = {
+            "qpos": pos2d, "kpos": pos2d,
+            "angles": self._angles(positions, S),
+            "start": jnp.zeros((), jnp.int32),
+        }
+        if cfg.is_encoder_decoder:
+            ctx["enc_out"] = self.encode(params, batch["encoder_frames"])
+        x, aux, _ = self._run_stack(params, x, ctx, None, "train", remat=remat)
+        if return_features:
+            x = L.apply_norm(params["final_norm"], x, cfg)
+            return x, jnp.asarray(aux, jnp.float32)
+        return self._logits(params, x), jnp.asarray(aux, jnp.float32)
+
+    def init_cache(self, batch: int, max_len: int, dtype=None) -> dict:
+        return cache_lib.init_cache(self.cfg, batch, max_len,
+                                    dtype or _dt(self.cfg))
+
+    def prefill(self, params, batch: dict, cache: dict
+                ) -> Tuple[jax.Array, dict]:
+        """Absorb a prompt; returns (last-position logits [B,V], cache)."""
+        cfg = self.cfg
+        tokens, positions = batch["tokens"], batch["positions"]
+        x = self._embed(params, tokens, positions, batch.get("vision_embeds"))
+        S = x.shape[1]
+        pos2d = positions if positions.ndim == 2 else positions[0]
+        ctx = {
+            "qpos": pos2d, "kpos": pos2d,
+            "angles": self._angles(positions, S),
+            "start": cache["length"],
+        }
+        if cfg.is_encoder_decoder:
+            ctx["enc_out"] = self.encode(params, batch["encoder_frames"])
+        x, aux, cache = self._run_stack(params, x, ctx, cache, "prefill")
+        cache["length"] = cache["length"] + S
+        return self._logits(params, x[:, -1]), cache
+
+    def decode_step(self, params, token: jax.Array, cache: dict,
+                    ) -> Tuple[jax.Array, dict]:
+        """token: [B,1] int32. One serve_step: logits for the next token."""
+        cfg = self.cfg
+        B = token.shape[0]
+        pos_scalar = cache["length"]
+        pos = jnp.broadcast_to(pos_scalar, (B, 1)).astype(jnp.int32)
+        if cfg.use_mrope:
+            positions = jnp.broadcast_to(pos_scalar, (3, B, 1)).astype(jnp.int32)
+        else:
+            positions = pos
+        x = self._embed(params, token, positions)
+        ctx = {
+            "qpos": pos, "kpos": None,
+            "angles": self._angles(positions, 1),
+            "start": pos_scalar,
+            "first": cache.get("first"),
+        }
+        x, _, cache = self._run_stack(params, x, ctx, cache, "decode")
+        cache = dict(cache, length=cache["length"] + 1)
+        return self._logits(params, x[:, 0]), cache

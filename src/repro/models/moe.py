@@ -1,0 +1,139 @@
+"""Mixture-of-Experts layer with grouped, sort-based, capacity-bounded
+dispatch.
+
+TPU/SPMD adaptation: tokens are dispatched *within groups* (one group per
+batch row), so every buffer keeps the batch dim as its leading axis and
+shards cleanly over the `data` mesh axis — no token-dispatch tensor is
+ever replicated.  Within a group, assignments are sorted by expert id and
+scattered into a dense [E, C_g, D] buffer (memory O(S*k*D) per group,
+not O(S*E*C)), then all experts run as one batched MXU einsum.
+
+Capacity per group C_g = ceil(S*k/E * capacity_factor); overflow drops
+the lowest-priority assignments (Switch-style).  A group with a single
+token (decode) is automatically dropless.  Expert weights keep the
+expert dim replicated and shard the FFN dim over `model` (divisibility-
+proof for 60/128 expert counts); the expert-parallel all-to-all variant
+is evaluated in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+
+    def expert_stack(k, d_in, d_out):
+        scale = 1.0 / math.sqrt(d_in)
+        return (jax.random.normal(k, (m.num_experts, d_in, d_out), jnp.float32)
+                * scale).astype(dtype)
+
+    p = {
+        "router": dense_init(ks[0], d, m.num_experts, dtype),
+        "wi": expert_stack(ks[1], d, m.expert_d_ff),
+        "wg": expert_stack(ks[2], d, m.expert_d_ff),
+        "wo": expert_stack(ks[3], m.expert_d_ff, d),
+    }
+    if m.num_shared_experts:
+        f = m.shared_expert_d_ff
+        p["shared"] = {
+            "wi": dense_init(ks[4], d, f, dtype),
+            "wg": dense_init(ks[5], d, f, dtype),
+            "wo": dense_init(ks[6], f, d, dtype),
+            "gate": dense_init(ks[7], d, 1, dtype),
+        }
+    return p
+
+
+def _dispatch_group(xg: jax.Array, top_idx: jax.Array, gates: jax.Array,
+                    E: int, C: int):
+    """One group's sort-based dispatch.
+
+    xg [S,D], top_idx [S,k], gates [S,k] ->
+      (xe [E*C, D], slot [S*k], keep [S*k], tok [S*k], gate [S*k])
+    """
+    S, k = top_idx.shape
+    Sk = S * k
+    expert_idx = top_idx.reshape(Sk)
+    token_idx = jnp.repeat(jnp.arange(S), k)
+    gate_flat = gates.reshape(Sk)
+    order = jnp.argsort(expert_idx)                    # stable
+    se = expert_idx[order]
+    st_tok = token_idx[order]
+    st_gate = gate_flat[order]
+    group_start = jnp.searchsorted(se, se, side="left")
+    pos_in_e = jnp.arange(Sk) - group_start
+    keep = pos_in_e < C
+    slot = jnp.where(keep, se * C + pos_in_e, E * C)   # E*C = trash row
+    xe = jnp.zeros((E * C + 1, xg.shape[-1]), xg.dtype).at[slot].set(xg[st_tok])
+    return xe[:-1], slot, keep, st_tok, st_gate
+
+
+def apply_moe(params, x: jax.Array, cfg: ModelConfig,
+              capacity_factor: float = 1.25) -> Tuple[jax.Array, jax.Array]:
+    """x: [B,S,D] -> (y [B,S,D], aux_loss scalar f32)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    k, E = m.num_experts_per_tok, m.num_experts
+    C = max(1, math.ceil(S * k / E * capacity_factor))
+    C = min(C, S * k)
+
+    logits = (x @ params["router"]).astype(jnp.float32)          # [B,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(logits, k)                 # [B,S,k]
+    gates = jax.nn.softmax(top_vals, axis=-1).astype(x.dtype)
+
+    xe, slot, keep, st_tok, st_gate = jax.vmap(
+        lambda xg, ti, g: _dispatch_group(xg, ti, g, E, C))(x, top_idx, gates)
+    xe = xe.reshape(B, E, C, D)
+    # keep the dispatch buffers batch-sharded — without the constraint
+    # the data-dependent scatter defeats SPMD propagation and XLA
+    # replicates the (huge) [B,E,C,D] buffer (§Perf iteration 2)
+    from repro.distributed.sharding import maybe_constrain
+    batch_ax = ("pod", "data")
+    xe = maybe_constrain(xe, batch_ax, None, None, None)
+
+    # ---- per-expert FFN (SwiGLU), batched over groups ----------------------
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, params["wg"])) * \
+        jnp.einsum("becd,edf->becf", xe, params["wi"])
+    h = maybe_constrain(h, batch_ax, None, None, "model")
+    ye = jnp.einsum("becf,efd->becd", h, params["wo"])
+    # keep ye's model-dim SHARDED: the f-contraction then lowers to a
+    # reduce-scatter instead of a full all-reduce of the (padded, 25%
+    # dead) [B,E,C,D] buffer; only the compact [B,S,D] result is
+    # re-gathered after the combine (§Perf iteration 2b)
+    ye = maybe_constrain(ye, batch_ax, None, None, "model")
+    ye = ye.reshape(B, E * C, D)
+
+    # ---- combine ------------------------------------------------------------
+    def combine(ye_g, slot_g, keep_g, tok_g, gate_g):
+        y_sorted = jnp.where(keep_g[:, None],
+                             ye_g[jnp.minimum(slot_g, E * C - 1)], 0)
+        return jnp.zeros((S, D), x.dtype).at[tok_g].add(
+            y_sorted * gate_g[:, None])
+
+    y = jax.vmap(combine)(ye, slot, keep, st_tok, st_gate)
+    y = maybe_constrain(y, batch_ax, None, None)
+
+    # ---- shared expert(s) ----------------------------------------------------
+    if m.num_shared_experts:
+        sp = params["shared"]
+        hs = jax.nn.silu(x @ sp["wg"]) * (x @ sp["wi"])
+        ys = (hs @ sp["wo"]) * jax.nn.sigmoid(
+            (x @ sp["gate"]).astype(jnp.float32)).astype(x.dtype)
+        y = y + ys
+
+    # ---- load-balance auxiliary loss (Switch) --------------------------------
+    me = probs.mean((0, 1))                                       # [E]
+    ce = jax.nn.one_hot(top_idx[..., 0], E, dtype=jnp.float32).mean((0, 1))
+    aux = (me * ce).sum() * E * m.router_aux_loss_coef
+    return y, aux

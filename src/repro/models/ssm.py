@@ -1,0 +1,402 @@
+"""Recurrent blocks: Mamba-style selective SSM (Hymba's parallel heads)
+and xLSTM's sLSTM / mLSTM cells.
+
+All three expose the same pair of entry points:
+
+  * ``<kind>_forward(params, x, state=None)``  — full-sequence scan used by
+    training and prefill; returns (y, final_state).
+  * ``<kind>_step(params, x_t, state)``        — O(1) single-token decode.
+
+States are fixed-size (independent of context length), which is what
+qualifies these architectures for the 500k-token decode shape.
+
+Sequence scans run as ``lax.scan`` over time.  This is the faithful
+recurrent formulation; the chunkwise-parallel variant (process chunks of
+128 steps with within-chunk matmuls, carrying chunk-boundary states) is
+implemented for mLSTM as ``mlstm_forward_chunked`` — the TPU-native
+adaptation that turns bandwidth-bound elementwise recurrence into
+MXU-shaped matmuls (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM (used by the hymba parallel block)
+
+
+def mamba_inner_dim(cfg: ModelConfig) -> int:
+    return (cfg.ssm.expand if cfg.ssm else 2) * cfg.d_model
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    inner = mamba_inner_dim(cfg)
+    state = cfg.ssm.state_size
+    width = cfg.ssm.conv_width
+    dt_rank = max(1, math.ceil(d / 16))
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * inner, dtype),      # x and z
+        "conv_w": (jax.random.normal(ks[1], (width, inner), jnp.float32)
+                   / math.sqrt(width)).astype(dtype),
+        "conv_b": jnp.zeros((inner,), dtype),
+        "x_proj": dense_init(ks[2], inner, dt_rank + 2 * state, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, inner, dtype),
+        "dt_bias": jnp.full((inner,), -4.6, dtype),             # softplus ~ 0.01
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, state + 1, dtype=jnp.float32),
+                                  (inner, 1))).astype(jnp.float32),
+        "D": jnp.ones((inner,), jnp.float32),
+        "out_proj": dense_init(ks[4], inner, d, dtype),
+    }
+
+
+def _mamba_conv_full(params, xz: jax.Array) -> jax.Array:
+    """Causal depthwise conv over [B,S,inner]."""
+    w = params["conv_w"].astype(jnp.float32)          # [W, inner]
+    W = w.shape[0]
+    x = xz.astype(jnp.float32)
+    xpad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):                                 # small static loop
+        out = out + xpad[:, i:i + x.shape[1]] * w[i]
+    return (out + params["conv_b"].astype(jnp.float32)).astype(xz.dtype)
+
+
+def _mamba_ssm_params(params, cfg: ModelConfig, xc: jax.Array):
+    """xc: [..., inner] -> (dt [...,inner], B [...,state], C [...,state])."""
+    state = cfg.ssm.state_size
+    proj = xc @ params["x_proj"]
+    dt_rank = proj.shape[-1] - 2 * state
+    dt, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + state], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_proj"] + params["dt_bias"])
+    return dt.astype(jnp.float32), Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def mamba_forward(params, x: jax.Array, cfg: ModelConfig,
+                  state: Optional[dict] = None) -> Tuple[jax.Array, dict]:
+    """x: [B,S,D] -> (y [B,S,D], state {h, conv})."""
+    B, S, _ = x.shape
+    inner = mamba_inner_dim(cfg)
+    nstate = cfg.ssm.state_size
+    xz = x @ params["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    if state is not None:
+        # prepend conv history (decode-continuation prefill)
+        xi_ext = jnp.concatenate([state["conv"].astype(xi.dtype), xi], axis=1)
+        xc = jax.nn.silu(_mamba_conv_full(params, xi_ext)[:, state["conv"].shape[1]:])
+        h0 = state["h"]
+    else:
+        xc = jax.nn.silu(_mamba_conv_full(params, xi))
+        h0 = jnp.zeros((B, inner, nstate), jnp.float32)
+    dt, Bm, Cm = _mamba_ssm_params(params, cfg, xc)
+    A = -jnp.exp(params["A_log"])                     # [inner, state]
+
+    # chunked double scan: the flat per-step scan snapshots h every step
+    # for backward (O(S) x state bytes); chunking bounds snapshots to
+    # O(S/chunk) outer + O(chunk) inner.  Padding steps are masked out
+    # (exact identity).
+    chunk = min(128, S)
+    pad = (-S) % chunk
+    def padseq(a):
+        return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+    dt_p, B_p, C_p = padseq(dt), padseq(Bm), padseq(Cm)
+    xc_p = padseq(xc.astype(jnp.float32))
+    valid = jnp.pad(jnp.ones((S,), bool), (0, pad))
+    nch = (S + pad) // chunk
+    # time-major chunks: [nch, chunk, B, ...]
+    tm = lambda a: a.reshape((a.shape[0], nch, chunk) + a.shape[2:]) \
+        .transpose((1, 2, 0) + tuple(range(3, a.ndim + 1)))
+    xs = (tm(dt_p), tm(B_p), tm(C_p), tm(xc_p),
+          valid.reshape(nch, chunk))
+
+    def step(h, t_xs):
+        dt_t, B_t, C_t, x_t, m_t = t_xs
+        dA = jnp.exp(dt_t[..., None] * A)             # [B,inner,state]
+        dBx = dt_t[..., None] * B_t[:, None, :] * x_t[..., None]
+        h_new = h * dA + dBx
+        h = jnp.where(m_t, h_new, h)
+        y = jnp.einsum("bis,bs->bi", h, C_t) + params["D"] * x_t
+        return h, y
+
+    def chunk_step(h, c_xs):
+        return jax.lax.scan(step, h, c_xs)
+
+    h, ys = jax.lax.scan(chunk_step, h0, xs)          # ys [nch,chunk,B,inner]
+    y = ys.reshape(nch * chunk, B, -1)[:S].transpose(1, 0, 2).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    # conv history for decode continuation: always [B, W-1, inner]
+    Wm1 = cfg.ssm.conv_width - 1
+    prev = state["conv"].astype(xi.dtype) if state is not None else \
+        jnp.zeros((B, Wm1, inner), xi.dtype)
+    conv_hist = jnp.concatenate([prev, xi], axis=1)[:, -Wm1:] if Wm1 else xi[:, :0]
+    return out, {"h": h, "conv": conv_hist}
+
+
+def mamba_step(params, x_t: jax.Array, cfg: ModelConfig,
+               state: dict) -> Tuple[jax.Array, dict]:
+    """x_t: [B,1,D]; state: {h [B,inner,state], conv [B,W-1,inner]}."""
+    xz = x_t @ params["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)                 # [B,1,inner]
+    hist = jnp.concatenate([state["conv"].astype(xi.dtype), xi], axis=1)
+    w = params["conv_w"].astype(jnp.float32)
+    xc = jax.nn.silu(
+        (hist.astype(jnp.float32) * w[None]).sum(1)
+        + params["conv_b"].astype(jnp.float32))       # [B,inner]
+    dt, Bm, Cm = _mamba_ssm_params(params, cfg, xc.astype(x_t.dtype))
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt[..., None] * A)
+    h = state["h"] * dA + dt[..., None] * Bm[:, None, :] * xc[..., None]
+    y = jnp.einsum("bis,bs->bi", h, Cm) + params["D"] * xc
+    y = (y[:, None].astype(x_t.dtype)) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    return out, {"h": h, "conv": hist[:, 1:]}
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    inner = mamba_inner_dim(cfg)
+    return {
+        "h": jnp.zeros((batch, inner, cfg.ssm.state_size), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm.conv_width - 1, inner), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) -----------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    inner = H * hd
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], d, inner, dtype),
+        "wk": dense_init(ks[1], d, inner, dtype),
+        "wv": dense_init(ks[2], d, inner, dtype),
+        "wi": dense_init(ks[3], d, H, dtype),
+        "wf": dense_init(ks[4], d, H, dtype),
+        "wog": dense_init(ks[5], d, inner, dtype),    # output gate
+        "out": dense_init(ks[6], inner, d, dtype),
+    }
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> dict:
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+    }
+
+
+def _mlstm_qkvif(params, x: jax.Array, cfg: ModelConfig):
+    B = x.shape[0]
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    shp = x.shape[:-1] + (H, hd)
+    q = (x @ params["wq"]).reshape(shp).astype(jnp.float32) / math.sqrt(hd)
+    k = (x @ params["wk"]).reshape(shp).astype(jnp.float32) / math.sqrt(hd)
+    v = (x @ params["wv"]).reshape(shp).astype(jnp.float32)
+    log_i = (x @ params["wi"]).astype(jnp.float32)               # [...,H]
+    log_f = -jax.nn.softplus(-(x @ params["wf"]).astype(jnp.float32))  # log sigmoid
+    return q, k, v, log_i, log_f
+
+
+def _mlstm_cell(C, n, m, q_t, k_t, v_t, li_t, lf_t):
+    """One mLSTM step on [B,H,...] tensors (f32)."""
+    m_new = jnp.maximum(lf_t + m, li_t)                # [B,H]
+    i_p = jnp.exp(li_t - m_new)
+    f_p = jnp.exp(lf_t + m - m_new)
+    C = f_p[..., None, None] * C + i_p[..., None, None] * (
+        k_t[..., :, None] * v_t[..., None, :])         # [B,H,hd_k,hd_v]
+    n = f_p[..., None] * n + i_p[..., None] * k_t
+    num = jnp.einsum("bhkv,bhk->bhv", C, q_t)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t)),
+                      jnp.exp(-m_new))
+    return C, n, m_new, num / den[..., None]
+
+
+def mlstm_forward(params, x: jax.Array, cfg: ModelConfig,
+                  state: Optional[dict] = None) -> Tuple[jax.Array, dict]:
+    B, S, _ = x.shape
+    st = state or mlstm_init_state(cfg, B)
+    q, k, v, li, lf = _mlstm_qkvif(params, x, cfg)
+
+    def step(carry, t):
+        C, n, m = carry
+        C, n, m, h = _mlstm_cell(C, n, m, q[:, t], k[:, t], v[:, t],
+                                 li[:, t], lf[:, t])
+        return (C, n, m), h
+
+    (C, n, m), hs = jax.lax.scan(step, (st["C"], st["n"], st["m"]),
+                                 jnp.arange(S))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, -1).astype(x.dtype)
+    y = h * jax.nn.sigmoid(x @ params["wog"])
+    return y @ params["out"], {"C": C, "n": n, "m": m}
+
+
+def mlstm_forward_chunked(params, x: jax.Array, cfg: ModelConfig,
+                          state: Optional[dict] = None,
+                          chunk: int = 128) -> Tuple[jax.Array, dict]:
+    """Chunkwise-parallel mLSTM: within-chunk attention-like matmuls +
+    cross-chunk recurrent state.  Mathematically equal to mlstm_forward
+    (same stabilized exponential gating), but MXU-friendly.
+    """
+    B, S, _ = x.shape
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    pad = (-S) % chunk
+    st = state or mlstm_init_state(cfg, B)
+    q, k, v, li, lf = _mlstm_qkvif(params, x, cfg)
+    if pad:
+        # identity gates on padding: log_f=0 (no decay), log_i=-inf (no
+        # insert) so the carried state is untouched by pad steps.
+        padseq = lambda a, c: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2),
+                                      constant_values=c)
+        q, k, v = padseq(q, 0), padseq(k, 0), padseq(v, 0)
+        li, lf = padseq(li, -1e30), padseq(lf, 0.0)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // chunk
+    # reshape to chunks: [B, nc, L, H, ...] -> scan over nc
+    rs = lambda a: a.reshape((B, nc, chunk) + a.shape[2:])
+    q, k, v, li, lf = map(rs, (q, k, v, li, lf))
+
+    def chunk_step(carry, ci):
+        C, n, m = carry                                 # [B,H,hd,hd],[B,H,hd],[B,H]
+        qc, kc, vc = q[:, ci], k[:, ci], v[:, ci]       # [B,L,H,hd]
+        lic, lfc = li[:, ci], lf[:, ci]                 # [B,L,H]
+        # cumulative log-f within the chunk (inclusive)
+        F = jnp.cumsum(lfc, axis=1)                     # [B,L,H]
+        # stabilizers: a_t = F_t (decay of initial state), b_ts for intra
+        # log weight of (k_s,v_s) at output t (s<=t): F_t - F_s + li_s
+        log_inter = F + m[:, None, :]                   # [B,L,H]
+        log_intra = (F[:, :, None, :] - F[:, None, :, :]
+                     + lic[:, None, :, :])              # [B,t,s,H]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        log_intra = jnp.where(tri[None, :, :, None], log_intra, -jnp.inf)
+        m_t = jnp.maximum(log_inter, log_intra.max(axis=2))   # [B,L,H]
+        w_inter = jnp.exp(log_inter - m_t)              # [B,L,H]
+        w_intra = jnp.exp(log_intra - m_t[:, :, None, :])     # [B,t,s,H]
+        # numerator
+        num_inter = jnp.einsum("bthk,bhkv->bthv", qc, C) * w_inter[..., None]
+        scores = jnp.einsum("bthd,bshd->btsh", qc, kc) * w_intra
+        num_intra = jnp.einsum("btsh,bshv->bthv", scores, vc)
+        num = num_inter + num_intra
+        # denominator
+        den_inter = jnp.einsum("bthk,bhk->bth", qc, n) * w_inter
+        den_intra = jnp.einsum("bthd,bshd,btsh->bth", qc, kc, w_intra)
+        den = jnp.maximum(jnp.abs(den_inter + den_intra), jnp.exp(-m_t))
+        h = num / den[..., None]                        # [B,L,H,hd]
+        # carry update to end of chunk
+        m_end = jnp.maximum(F[:, -1] + m, (F[:, -1:] - F + lic).max(axis=1))
+        wC_old = jnp.exp(F[:, -1] + m - m_end)          # [B,H]
+        w_new = jnp.exp(F[:, -1:] - F + lic - m_end[:, None, :])  # [B,L,H]
+        C_new = wC_old[..., None, None] * C + jnp.einsum(
+            "bshk,bshv,bsh->bhkv", kc, vc, w_new)
+        n_new = wC_old[..., None] * n + jnp.einsum("bshk,bsh->bhk", kc, w_new)
+        return (C_new, n_new, m_end), h
+
+    (C, n, m), hs = jax.lax.scan(chunk_step, (st["C"], st["n"], st["m"]),
+                                 jnp.arange(nc))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H * hd)[:, :S].astype(x.dtype)
+    xs = x[:, :S]
+    y = h * jax.nn.sigmoid(xs @ params["wog"])
+    return y @ params["out"], {"C": C, "n": n, "m": m}
+
+
+def mlstm_step(params, x_t: jax.Array, cfg: ModelConfig,
+               state: dict) -> Tuple[jax.Array, dict]:
+    q, k, v, li, lf = _mlstm_qkvif(params, x_t, cfg)   # seq dim = 1
+    C, n, m, h = _mlstm_cell(state["C"], state["n"], state["m"],
+                             q[:, 0], k[:, 0], v[:, 0], li[:, 0], lf[:, 0])
+    B = x_t.shape[0]
+    h = h.reshape(B, 1, -1).astype(x_t.dtype)
+    y = h * jax.nn.sigmoid(x_t @ params["wog"])
+    return y @ params["out"], {"C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: sLSTM (scalar memory) ------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "w": dense_init(ks[0], d, 4 * d, dtype),       # i,f,z,o pre-acts
+        # diagonal recurrent weights (block-diagonal in the paper; the
+        # diagonal restriction keeps the recurrence bandwidth-light)
+        "r": (jax.random.normal(ks[1], (4 * d,), jnp.float32) * 0.1).astype(dtype),
+        "out": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    z = lambda: jnp.zeros((batch, d), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": jnp.zeros((batch, d), jnp.float32)}
+
+
+def _slstm_cell(params, pre, state):
+    """pre: [B,4d] input pre-activations (x@W); adds diagonal recurrence."""
+    d = pre.shape[-1] // 4
+    r = params["r"].astype(jnp.float32)
+    hrec = jnp.concatenate([state["h"]] * 4, axis=-1) * r
+    pre = pre.astype(jnp.float32) + hrec
+    li = pre[:, :d]                                    # log-space input gate
+    lf = -jax.nn.softplus(-pre[:, d:2 * d])            # log sigmoid forget
+    z = jnp.tanh(pre[:, 2 * d:3 * d])
+    o = jax.nn.sigmoid(pre[:, 3 * d:])
+    m_new = jnp.maximum(lf + state["m"], li)
+    i_p = jnp.exp(li - m_new)
+    f_p = jnp.exp(lf + state["m"] - m_new)
+    c = f_p * state["c"] + i_p * z
+    n = f_p * state["n"] + i_p
+    h = o * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_forward(params, x: jax.Array, cfg: ModelConfig,
+                  state: Optional[dict] = None) -> Tuple[jax.Array, dict]:
+    B, S, _ = x.shape
+    st = state or slstm_init_state(cfg, B)
+    pre = x @ params["w"]                              # [B,S,4d]
+
+    # chunked double scan (same backward-snapshot bound as mamba_forward);
+    # the recurrence is gate-recurrent so padding is masked, not gated out
+    chunk = min(128, S)
+    pad = (-S) % chunk
+    pre_p = jnp.pad(pre, ((0, 0), (0, pad), (0, 0)))
+    valid = jnp.pad(jnp.ones((S,), bool), (0, pad))
+    nch = (S + pad) // chunk
+    pre_tm = pre_p.reshape(B, nch, chunk, -1).transpose(1, 2, 0, 3)
+    xs = (pre_tm, valid.reshape(nch, chunk))
+
+    def step(carry, t_xs):
+        pre_t, m_t = t_xs
+        new = _slstm_cell(params, pre_t, carry)
+        new = jax.tree.map(lambda a, b: jnp.where(m_t, a, b), new, carry)
+        return new, new["h"]
+
+    def chunk_step(carry, c_xs):
+        return jax.lax.scan(step, carry, c_xs)
+
+    st, hs = jax.lax.scan(chunk_step, st, xs)
+    h = hs.reshape(nch * chunk, B, -1)[:S].transpose(1, 0, 2).astype(x.dtype)
+    return h @ params["out"], st
+
+
+def slstm_step(params, x_t: jax.Array, cfg: ModelConfig,
+               state: dict) -> Tuple[jax.Array, dict]:
+    pre = (x_t @ params["w"])[:, 0]
+    new = _slstm_cell(params, pre, state)
+    h = new["h"][:, None].astype(x_t.dtype)
+    return h @ params["out"], new

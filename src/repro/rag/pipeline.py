@@ -1,0 +1,65 @@
+"""RAG pipeline: retrieve -> augment -> generate (paper Fig. 4 step 2).
+
+Prompt format (word-tokenizer friendly):
+    context : <top-k chunks> <sep> question : <q> <sep> answer :
+The generator is a ServeEngine over any repro model; quality is scored
+with repro.metrics against the reference answer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.data.tokenizer import EOS, SEP, Tokenizer
+from repro.retrieval.encoder import TextEncoder
+from repro.retrieval.index import FlatIndex
+from repro.serving.engine import ServeEngine
+
+
+@dataclass
+class RAGResult:
+    question: str
+    answer: str
+    contexts: List[str]
+    scores: np.ndarray
+
+
+def build_prompt(question: str, contexts: Sequence[str]) -> str:
+    ctx = " ".join(contexts)
+    return f"context : {ctx} <sep> question : {question} <sep> answer :"
+
+
+class RAGPipeline:
+    def __init__(self, encoder: TextEncoder, index: FlatIndex,
+                 engine: ServeEngine, tokenizer: Tokenizer,
+                 *, top_k: int = 5, max_new_tokens: int = 24):
+        self.encoder = encoder
+        self.index = index
+        self.engine = engine
+        self.tok = tokenizer
+        self.top_k = top_k
+        self.max_new_tokens = max_new_tokens
+
+    def retrieve(self, questions: Sequence[str]) -> List[List[str]]:
+        q_emb = self.encoder.encode(list(questions))
+        scores, idx = self.index.search(q_emb, self.top_k)
+        return [[str(p) for p in self.index.payloads(row)] for row in idx]
+
+    def answer(self, questions: Sequence[str]) -> List[RAGResult]:
+        contexts = self.retrieve(questions)
+        prompts = [build_prompt(q, c) for q, c in zip(questions, contexts)]
+        enc = [self.tok.encode(p, bos=True) for p in prompts]
+        results: List[RAGResult] = []
+        B = self.engine.batch_size
+        for start in range(0, len(enc), B):
+            chunk = enc[start:start + B]
+            outs = self.engine.generate(chunk, self.max_new_tokens,
+                                        eos_id=EOS)
+            for j, out in enumerate(outs):
+                text = self.tok.decode([t for t in out if t != EOS])
+                results.append(RAGResult(questions[start + j], text,
+                                         contexts[start + j],
+                                         np.zeros(0)))
+        return results

@@ -1,0 +1,45 @@
+"""Exact flat vector index (the paper's Faiss flat index, JAX-native).
+
+Search runs through the Pallas streaming top-k kernel on TPU (or its
+jnp reference on CPU); ``repro.distributed.collectives.distributed_topk``
+provides the corpus-sharded multi-node variant.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+class FlatIndex:
+    def __init__(self, dim: int, use_pallas: bool = False):
+        self.dim = dim
+        self.use_pallas = use_pallas
+        self._emb: Optional[np.ndarray] = None
+        self._payloads: List[object] = []
+
+    def __len__(self) -> int:
+        return len(self._payloads)
+
+    def add(self, embeddings: np.ndarray, payloads: Sequence[object]) -> None:
+        embeddings = np.asarray(embeddings, np.float32)
+        assert embeddings.shape[1] == self.dim
+        self._emb = embeddings if self._emb is None else \
+            np.concatenate([self._emb, embeddings])
+        self._payloads += list(payloads)
+
+    def search(self, queries: np.ndarray, k: int
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """[Nq, dim] -> (scores [Nq,k], indices [Nq,k])."""
+        assert self._emb is not None and len(self._payloads) >= 1
+        k = min(k, len(self._payloads))
+        import jax.numpy as jnp
+        s, i = ops.retrieval_topk(jnp.asarray(queries),
+                                  jnp.asarray(self._emb), k,
+                                  use_pallas=self.use_pallas)
+        return np.asarray(s), np.asarray(i)
+
+    def payloads(self, idx: Sequence[int]) -> List[object]:
+        return [self._payloads[int(i)] for i in idx]

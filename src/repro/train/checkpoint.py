@@ -1,0 +1,39 @@
+"""Flat-npz checkpointing for param/opt pytrees (no external deps)."""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if isinstance(p, jax.tree_util.DictKey)
+            else str(getattr(p, "idx", p)) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load(path: str, like) -> object:
+    """Restore into the structure of ``like`` (shapes must match)."""
+    data = np.load(path)
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    new_leaves = []
+    for p, leaf in leaves_with_path:
+        key = "/".join(
+            str(x.key) if isinstance(x, jax.tree_util.DictKey)
+            else str(getattr(x, "idx", x)) for x in p)
+        arr = data[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

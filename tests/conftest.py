@@ -1,0 +1,10 @@
+# NOTE: deliberately no XLA_FLAGS device-count override here — smoke
+# tests and benches must see the single real CPU device.  Only
+# repro.launch.dryrun sets the 512-placeholder flag (in its own process).
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,60 @@
+import pytest
+
+from repro.configs import (ARCH_IDS, INPUT_SHAPES, get_config,
+                           get_smoke_config, shape_applicable)
+
+EXPECTED = {
+    "nemotron-4-15b": (32, 6144, 48, 8, 24576, 256000),
+    "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+    "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+    "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+    "gemma2-9b": (42, 3584, 16, 8, 14336, 256000),
+    "olmo-1b": (16, 2048, 16, 16, 8192, 50304),
+    "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+    "whisper-base": (6, 512, 8, 8, 2048, 51865),
+    "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+    "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+}
+
+PARAM_COUNTS_B = {          # total params, billions (±15% tolerance)
+    "nemotron-4-15b": 15.6, "qwen3-moe-30b-a3b": 30.5, "hymba-1.5b": 1.6,
+    "llama3-8b": 8.0, "gemma2-9b": 9.2, "olmo-1b": 1.2,
+    "qwen2-vl-72b": 72.7, "whisper-base": 0.05, "xlstm-350m": 0.28,
+    "qwen2-moe-a2.7b": 14.3,
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_assigned_config(arch):
+    c = get_config(arch)
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == EXPECTED[arch]
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_counts(arch):
+    c = get_config(arch)
+    expect = PARAM_COUNTS_B[arch] * 1e9
+    assert abs(c.param_count() - expect) / expect < 0.15
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_variants(arch):
+    r = get_smoke_config(arch)
+    assert r.num_layers == 2 and r.d_model <= 512
+    assert r.num_heads % r.num_kv_heads == 0
+    if r.moe:
+        assert r.moe.num_experts <= 4
+    if r.mrope_sections:
+        assert sum(r.mrope_sections) == r.resolved_head_dim // 2
+
+
+def test_long_500k_policy():
+    runs = {a for a in ARCH_IDS
+            if shape_applicable(get_config(a), INPUT_SHAPES["long_500k"])}
+    assert runs == {"hymba-1.5b", "gemma2-9b", "xlstm-350m"}
+
+
+def test_active_params_moe():
+    c = get_config("qwen3-moe-30b-a3b")
+    assert c.active_param_count() < 0.15 * c.param_count()

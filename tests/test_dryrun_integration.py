@@ -1,0 +1,51 @@
+"""Dry-run integration: lower+compile a pair on a small placeholder mesh
+in a subprocess (the device-count flag must be set before jax init, so
+this cannot run in-process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import json
+import jax
+from jax.sharding import AxisType
+from repro.configs import get_config, INPUT_SHAPES
+from repro.launch.specs import build_step
+from repro.launch import roofline
+
+mesh = jax.make_mesh((4, 4), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
+cfg = get_config("olmo-1b")
+shape = INPUT_SHAPES["decode_32k"]
+step, args, in_sh, out_sh, meta = build_step(cfg, shape, mesh)
+with mesh:
+    compiled = jax.jit(step, in_shardings=in_sh,
+                       out_shardings=out_sh).lower(*args).compile()
+stats = roofline.analyze(compiled.as_text())
+mem = compiled.memory_analysis()
+print(json.dumps({
+    "dot_flops": stats.dot_flops,
+    "coll_bytes": stats.collective_bytes,
+    "temp_bytes": int(mem.temp_size_in_bytes),
+    "arg_bytes": int(mem.argument_size_in_bytes),
+}))
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_pair_on_16_devices():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=480,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["dot_flops"] > 0
+    # decode step must be far below HBM per device even on 16 chips
+    assert rec["arg_bytes"] + rec["temp_bytes"] < 200e9

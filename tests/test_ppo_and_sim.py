@@ -1,0 +1,80 @@
+"""PPO identifier learning + cluster-sim integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ppo
+from repro.core.cluster import make_paper_testbed
+from repro.core.coordinator import Coordinator
+from repro.core.identifier import OnlineQueryIdentifier
+from repro.core.inter_node import CapacityFunction
+from repro.core.latency_model import LatencyOracle, fit_latency_models
+from repro.core.workload import QueryGenerator
+
+
+def test_standardize_feedback():
+    f = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    out = ppo.standardize_feedback(f)
+    assert abs(float(out.mean())) < 1e-6
+    assert abs(float(out.std()) - 1.0) < 1e-5
+
+
+def test_ppo_learns_contextual_bandit():
+    rng = np.random.default_rng(0)
+    D, N = 32, 4
+    proto = rng.standard_normal((N, D))
+    proto /= np.linalg.norm(proto, axis=1, keepdims=True)
+    params = ppo.init_policy(jax.random.PRNGKey(0), D, N)
+    opt = ppo.init_adam(params)
+    for step in range(60):
+        dom = rng.integers(0, N, 256)
+        e = proto[dom] + 0.3 * rng.standard_normal((256, D))
+        e /= np.linalg.norm(e, axis=1, keepdims=True)
+        probs = np.asarray(ppo.act_probs(params, jnp.asarray(e)))
+        a = (rng.random((256, 1)) > probs.cumsum(1)).sum(1).clip(0, N - 1)
+        f = np.where(a == dom, 1.0, 0.3)
+        old = jax.tree.map(lambda x: x, params)
+        for _ in range(4):
+            params, opt, _ = ppo.ppo_update(
+                params, old, opt, jnp.asarray(e), jnp.asarray(a),
+                jnp.asarray(f))
+    dom = rng.integers(0, N, 1000)
+    e = proto[dom] + 0.3 * rng.standard_normal((1000, D))
+    e /= np.linalg.norm(e, axis=1, keepdims=True)
+    acc = (np.asarray(ppo.act_probs(params, jnp.asarray(e))).argmax(1)
+           == dom).mean()
+    assert acc > 0.7
+
+
+def test_latency_fit_quadratic_beats_linear():
+    from repro.configs.edge_pool import MODEL_SPECS
+    oracle = LatencyOracle(seed=0)
+    _, rmses = fit_latency_models(oracle, MODEL_SPECS["llama-3b"], seed=2)
+    assert rmses["quadratic"] < rmses["linear"]
+
+
+def test_sim_slot_loop_runs():
+    nodes, qual, w = make_paper_testbed(seed=0)
+    for n in nodes:
+        n.capacity = CapacityFunction(100.0, 0.0, [])
+    gen = QueryGenerator(seed=1)
+    ident = OnlineQueryIdentifier(64, len(nodes), update_threshold=100)
+    coord = Coordinator(nodes, ident, seed=3)
+    for qs in gen.dirichlet_slots(3, 120, alpha=2.0):
+        m = coord.run_slot(qs, slo_s=20.0)
+        assert 0.0 <= m.quality_mean <= 1.0
+        assert 0.0 <= m.drop_rate <= 1.0
+        assert m.n_queries == 120
+
+
+def test_oracle_routing_beats_random_quality():
+    nodes, qual, w = make_paper_testbed(seed=0)
+    spec = nodes[0].pool[1]
+    doms = np.arange(6)
+    q_best = np.mean([qual.realized(spec, d, qual.best_node(d))
+                      for d in doms for _ in range(30)])
+    rng = np.random.default_rng(0)
+    q_rand = np.mean([qual.realized(spec, d, rng.integers(0, 4))
+                      for d in doms for _ in range(30)])
+    assert q_best > q_rand + 0.02
