@@ -1,0 +1,73 @@
+"""Serving microbenchmark: compiled while_loop decode vs. the seed
+per-token Python loop (``ServeEngine.generate_reference``).
+
+Reports tokens/sec for both paths on a dispatch-bound smoke config so
+future PRs can track serving regressions; the acceptance bar for the
+compiled path is >= 5x the Python loop.
+
+    PYTHONPATH=src python -m benchmarks.serve_throughput
+    PYTHONPATH=src python -m benchmarks.serve_throughput \
+        --arch gemma2-9b --batch 8 --new-tokens 64 --d-model 64
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models import Model
+from repro.serving import GenerationParams, ServeEngine
+
+from benchmarks.common import Bench
+
+
+def time_path(fn, repeats):
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.time()
+        fn()
+        best = min(best, time.time() - t0)
+    return best
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b", choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--d-model", type=int, default=32)
+    ap.add_argument("--vocab", type=int, default=256)
+    ap.add_argument("--repeats", type=int, default=5)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch, max_d_model=args.d_model,
+                           vocab=args.vocab)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0),
+                               max_seq=args.prompt_len + args.new_tokens)
+    max_len = args.prompt_len + args.new_tokens + 8
+    eng = ServeEngine(cfg, params, max_len=max_len, batch_size=args.batch)
+    gen = GenerationParams(max_new_tokens=args.new_tokens)
+    prompts = [[(7 * i) % (cfg.vocab_size - 5) + 5] * args.prompt_len
+               for i in range(args.batch)]
+    n_tokens = args.batch * args.new_tokens
+
+    eng.generate(prompts, gen=gen)               # compile both paths
+    eng.generate_reference(prompts, gen=gen)
+
+    t_new = time_path(lambda: eng.generate(prompts, gen=gen), args.repeats)
+    t_ref = time_path(lambda: eng.generate_reference(prompts, gen=gen),
+                      args.repeats)
+
+    bench = Bench("serve_throughput")
+    bench.add("python_loop", n_tokens / t_ref, t_ref * 1e3 / args.new_tokens)
+    bench.add("compiled_loop", n_tokens / t_new, t_new * 1e3 / args.new_tokens)
+    bench.add("speedup", t_ref / t_new, 0.0)
+    bench.finish(["path", "tokens_per_sec", "ms_per_step"])
+    print(f"speedup: {t_ref/t_new:.1f}x "
+          f"({'meets' if t_ref/t_new >= 5 else 'BELOW'} the 5x bar)")
+
+
+if __name__ == "__main__":
+    main()

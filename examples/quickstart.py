@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_smoke_config
 from repro.models import Model
-from repro.serving.engine import ServeEngine
+from repro.serving import GenerationParams, RequestQueue, ServeEngine
 from repro.train.train_step import init_opt_state, make_train_step
 
 
@@ -53,10 +53,14 @@ def main():
         params, opt, m = step(params, opt, batch)
         print(f"step {i}: loss {float(m['loss']):.4f}")
 
-    # greedy generation
+    # greedy generation through the request queue (compiled decode loop)
     eng = ServeEngine(cfg, params, max_len=64, batch_size=2)
-    outs = eng.generate([[1, 2, 3, 4], [7, 8, 9]], max_new_tokens=8)
-    print("generated token ids:", outs)
+    queue = RequestQueue(eng, GenerationParams(max_new_tokens=8))
+    rids = queue.submit_all([[1, 2, 3, 4], [7, 8, 9], [2, 4, 6]])
+    outs = queue.run()
+    print("generated token ids:", [outs[r] for r in rids])
+    print(f"queue: {queue.stats.waves} waves, "
+          f"slot utilization {queue.stats.slot_utilization:.0%}")
 
 
 if __name__ == "__main__":

@@ -8,7 +8,8 @@ Pipeline per slot (paper Fig. 4):
      (each holding a *different* partition of the corpus),
   4. each node retrieves top-k chunks from ITS OWN flat index (Pallas
      streaming top-k on TPU; jnp ref on CPU), builds prompts, and decodes
-     answers with a tiny trained LM through the batched ServeEngine,
+     answers with a tiny trained LM through the RequestQueue scheduler
+     over the compiled-decode ServeEngine,
   5. answers are scored (ROUGE-L + BERTScore composite, Eq. 9) against
      references; the scores drive the PPO update.
 
@@ -39,7 +40,7 @@ from repro.models import Model
 from repro.rag.pipeline import build_prompt
 from repro.retrieval.encoder import TextEncoder
 from repro.retrieval.index import FlatIndex
-from repro.serving.engine import ServeEngine
+from repro.serving import GenerationParams, RequestQueue, ServeEngine
 from repro.train import checkpoint
 
 CKPT = "experiments/tiny_lm.npz"
@@ -82,17 +83,14 @@ class EdgeRAGNode:
     def serve(self, questions):
         q_emb = self.encoder.encode(questions)
         _, idx = self.index.search(q_emb, min(TOP_K, len(self.index)))
-        answers = []
-        for start in range(0, len(questions), self.engine.batch_size):
-            js = range(start, min(start + self.engine.batch_size,
-                                  len(questions)))
-            prompts = [build_prompt(questions[j],
-                                    self.index.payloads(idx[j]))
-                       for j in js]
-            enc = [self.tok.encode(p, bos=True) for p in prompts]
-            outs = self.engine.generate(enc, max_new_tokens=16, eos_id=EOS)
-            answers += [self.tok.decode(o) for o in outs]
-        return answers
+        queue = RequestQueue(self.engine,
+                             GenerationParams(max_new_tokens=16, eos_id=EOS))
+        rids = queue.submit_all(
+            self.tok.encode(build_prompt(q, self.index.payloads(idx[j])),
+                            bos=True)
+            for j, q in enumerate(questions))
+        outs = queue.run()
+        return [self.tok.decode(outs[r]) for r in rids]
 
 
 def run(method: str, nodes, qas_by_domain, encoder, slots, per_slot,

@@ -1,0 +1,13 @@
+"""jax version compatibility (the code targets jax >= 0.6 APIs; older
+releases keep shard_map in experimental and call check_vma check_rep)."""
+try:
+    from jax import shard_map as _shard_map           # jax >= 0.6
+    _CHECK_KW = "check_vma"
+except ImportError:                                    # jax < 0.5
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **{_CHECK_KW: check_vma})

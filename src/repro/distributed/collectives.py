@@ -23,7 +23,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.distributed._compat import shard_map
 
 
 def distributed_topk(queries: jax.Array, corpus: jax.Array, k: int,

@@ -22,6 +22,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.6 names CompilerParams TPUCompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 NEG_INF = -1e30
 
 
@@ -93,7 +97,7 @@ def topk_pallas(queries: jax.Array, docs: jax.Array, k: int, *,
             pltpu.VMEM((q_block, k), jnp.int32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
     )(queries, docs)
     return scores[:Nq], idx[:Nq]

@@ -2,13 +2,16 @@
 
 Prompt format (word-tokenizer friendly):
     context : <top-k chunks> <sep> question : <q> <sep> answer :
-The generator is a ServeEngine over any repro model; quality is scored
-with repro.metrics against the reference answer.
+The generator runs through the request-level ``RequestQueue`` scheduler
+(bucket-packed waves over the ServeEngine's static slots) instead of
+fixed-size chunking; quality is scored with repro.metrics against the
+reference answer.  Retrieval scores (inner products from the flat
+index) are propagated into each ``RAGResult``.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -16,6 +19,8 @@ from repro.data.tokenizer import EOS, SEP, Tokenizer
 from repro.retrieval.encoder import TextEncoder
 from repro.retrieval.index import FlatIndex
 from repro.serving.engine import ServeEngine
+from repro.serving.sampling import GenerationParams
+from repro.serving.scheduler import RequestQueue
 
 
 @dataclass
@@ -23,7 +28,7 @@ class RAGResult:
     question: str
     answer: str
     contexts: List[str]
-    scores: np.ndarray
+    scores: np.ndarray          # per-retrieved-chunk index scores, [top_k]
 
 
 def build_prompt(question: str, contexts: Sequence[str]) -> str:
@@ -42,24 +47,21 @@ class RAGPipeline:
         self.top_k = top_k
         self.max_new_tokens = max_new_tokens
 
-    def retrieve(self, questions: Sequence[str]) -> List[List[str]]:
+    def retrieve(self, questions: Sequence[str]
+                 ) -> Tuple[List[List[str]], np.ndarray]:
+        """Returns (contexts per question, index scores [Nq, top_k])."""
         q_emb = self.encoder.encode(list(questions))
         scores, idx = self.index.search(q_emb, self.top_k)
-        return [[str(p) for p in self.index.payloads(row)] for row in idx]
+        contexts = [[str(p) for p in self.index.payloads(row)] for row in idx]
+        return contexts, scores
 
     def answer(self, questions: Sequence[str]) -> List[RAGResult]:
-        contexts = self.retrieve(questions)
+        contexts, scores = self.retrieve(questions)
         prompts = [build_prompt(q, c) for q, c in zip(questions, contexts)]
-        enc = [self.tok.encode(p, bos=True) for p in prompts]
-        results: List[RAGResult] = []
-        B = self.engine.batch_size
-        for start in range(0, len(enc), B):
-            chunk = enc[start:start + B]
-            outs = self.engine.generate(chunk, self.max_new_tokens,
-                                        eos_id=EOS)
-            for j, out in enumerate(outs):
-                text = self.tok.decode([t for t in out if t != EOS])
-                results.append(RAGResult(questions[start + j], text,
-                                         contexts[start + j],
-                                         np.zeros(0)))
-        return results
+        queue = RequestQueue(self.engine, GenerationParams(
+            max_new_tokens=self.max_new_tokens, eos_id=EOS))
+        rids = queue.submit_all(self.tok.encode(p, bos=True) for p in prompts)
+        outs = queue.run()
+        return [RAGResult(q, self.tok.decode(outs[rid]),
+                          contexts[i], scores[i])
+                for i, (q, rid) in enumerate(zip(questions, rids))]

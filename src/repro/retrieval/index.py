@@ -32,9 +32,15 @@ class FlatIndex:
 
     def search(self, queries: np.ndarray, k: int
                ) -> Tuple[np.ndarray, np.ndarray]:
-        """[Nq, dim] -> (scores [Nq,k], indices [Nq,k])."""
-        assert self._emb is not None and len(self._payloads) >= 1
+        """[Nq, dim] -> (scores [Nq,k'], indices [Nq,k']) with
+        k' = min(k, index size); an empty index (or k <= 0) yields
+        [Nq, 0] results instead of failing."""
+        queries = np.asarray(queries, np.float32)
         k = min(k, len(self._payloads))
+        if self._emb is None or k <= 0:
+            nq = queries.shape[0]
+            return (np.zeros((nq, 0), np.float32),
+                    np.zeros((nq, 0), np.int64))
         import jax.numpy as jnp
         s, i = ops.retrieval_topk(jnp.asarray(queries),
                                   jnp.asarray(self._emb), k,

@@ -1,0 +1,10 @@
+"""Serving stack: compiled-decode engine, sampling params, request queue.
+
+    from repro.serving import ServeEngine, GenerationParams, RequestQueue
+"""
+from repro.serving.engine import ServeEngine
+from repro.serving.sampling import GenerationParams, sample_token
+from repro.serving.scheduler import Completion, QueueStats, RequestQueue
+
+__all__ = ["ServeEngine", "GenerationParams", "sample_token",
+           "Completion", "QueueStats", "RequestQueue"]

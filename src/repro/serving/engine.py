@@ -1,21 +1,45 @@
-"""Batched serving engine: jit'd prefill + decode loop over a KV cache.
+"""Batched serving engine: jit'd prefill + fully on-device decode loop.
 
 This replaces the paper's vLLM backend with a JAX-native engine: a
 preallocated cache (full / rolling-window / recurrent, per architecture)
-and two compiled steps (prefill, serve_step).  Greedy or temperature
-sampling.  Batch requests are padded to the engine's (batch, prompt_len)
-buckets — the static-shape analogue of continuous batching.
+and two compiled programs:
+
+  prefill      — pads host-side in numpy, then one jitted program builds
+                 positions + cache, absorbs the prompt batch, and samples
+                 the first token
+  decode loop  — a single ``jax.lax.while_loop`` that samples, writes
+                 the output buffer, tracks per-row done flags and EOS,
+                 and early-exits when every row has finished
+
+There is no per-token host synchronization: ``generate`` dispatches two
+compiled programs, then performs exactly one device->host transfer of
+the [B, max_new_tokens] output buffer and per-row lengths.
+
+Prompt batches are left-padded to a power-of-two *bucket* so the
+prefill jit cache is reused across calls (the static-shape analogue of
+continuous batching); the decode loop is independent of the prompt
+bucket and compiles once per (batch, GenerationParams).  Architectures
+with recurrent state (mLSTM/sLSTM/hymba) absorb pad embeddings into
+their state, so for those the batch is padded to the exact max prompt
+length instead of a bucket — identical numerics to unbucketed serving.
+
+``generate_reference`` keeps the original per-token Python loop (one
+host sync per token) for parity tests and the throughput benchmark.
 """
 from __future__ import annotations
 
-import functools
 from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.model import Model
+from repro.serving.sampling import GenerationParams, sample_token
+
+_RECURRENT_KINDS = ("mlstm", "slstm", "hymba")
+_MIN_BUCKET = 8
 
 
 class ServeEngine:
@@ -31,30 +55,54 @@ class ServeEngine:
         self.max_len = max_len
         self.batch_size = batch_size
         self.pad_id = pad_id
-        self._prefill = jax.jit(self.model.prefill)
+        # recurrent state absorbs pad embeddings -> exact-length padding
+        self._exact_length = any(kind in _RECURRENT_KINDS
+                                 for _, kind in self.model.slots)
         self._decode = jax.jit(self.model.decode_step)
+        self._prefill_sample = jax.jit(self._prefill_sample_impl,
+                                       static_argnames=("gp",))
+        self._decode_loop = jax.jit(self._decode_loop_impl,
+                                    static_argnames=("gp",))
 
-    def _pad_batch(self, prompts: List[List[int]]):
-        """Left-pad to a common length; pad positions are marked -1 so
-        attention masks them.  (Recurrent archs absorb pad embeddings into
-        their state — prefer uniform-length prompts for SSM families.)"""
+    # ---------------------------------------------------------------- batching
+
+    def prompt_bucket(self, prompt_len: int, max_new_tokens: int = 0) -> int:
+        """Padded prompt length for a request: the smallest power-of-two
+        bucket >= prompt_len that still leaves room in the cache for
+        ``max_new_tokens`` decode steps.  Exact-length for recurrent
+        architectures (pads would perturb their state)."""
+        if self._exact_length:
+            return prompt_len
+        cap = max(prompt_len, self.max_len - max_new_tokens)
+        b = _MIN_BUCKET
+        while b < prompt_len:
+            b *= 2
+        return min(b, cap)
+
+    def _pad_batch(self, prompts: List[List[int]], pad_to: int
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """Left-pad to ``pad_to`` on the host (numpy: one device transfer
+        instead of one dispatch per row).  Returns int32 (tokens [B,L],
+        first-valid-position [B])."""
         B = self.batch_size
         assert len(prompts) <= B
-        L = max(len(p) for p in prompts)
-        toks = jnp.full((B, L), self.pad_id, jnp.int32)
-        pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
-        first = jnp.full((B,), L, jnp.int32)   # unused rows: everything padded
+        L = max(pad_to, max(len(p) for p in prompts))
+        toks = np.full((B, L), self.pad_id, np.int32)
+        first = np.full((B,), L, np.int32)     # unused rows: everything padded
         for i, p in enumerate(prompts):
-            toks = toks.at[i, L - len(p):].set(jnp.asarray(p, jnp.int32))
-            first = first.at[i].set(L - len(p))
-        pos = jnp.where(pos >= first[:, None], pos, -1)
-        return toks, pos, first, L
+            toks[i, L - len(p):] = p
+            first[i] = L - len(p)
+        return toks, first
 
-    def generate(self, prompts: List[List[int]], max_new_tokens: int = 32,
-                 temperature: float = 0.0, key=None,
-                 eos_id: Optional[int] = None) -> List[List[int]]:
-        toks, pos, first, L = self._pad_batch(prompts)
-        B = self.batch_size
+    # ------------------------------------------------------- compiled programs
+
+    def _prefill_sample_impl(self, params, toks, first, key,
+                             gp: GenerationParams):
+        """One program: positions + fresh cache + prefill + first sampled
+        token.  Pad positions are marked -1 so attention masks them."""
+        B, L = toks.shape
+        pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+        pos = jnp.where(pos >= first[:, None], pos, -1)
         if self.cfg.use_mrope:
             pos = jnp.broadcast_to(pos, (3, B, L))
         batch = {"tokens": toks, "positions": pos}
@@ -63,28 +111,113 @@ class ServeEngine:
                 (B, self.cfg.encoder_seq_len, self.cfg.d_model), jnp.float32)
         cache = self.model.init_cache(B, self.max_len, jnp.float32)
         cache["first"] = first
-        logits, cache = self._prefill(self.params, batch, cache)
+        logits, cache = self.model.prefill(params, batch, cache)
+        return sample_token(logits, gp, key, 0), cache
 
+    def _decode_loop_impl(self, params, tok, cache, key, n_active,
+                          gp: GenerationParams):
+        """Compiled decode: carries (t, token, cache, done, out, count)
+        through a ``while_loop``; exits early once all active rows are
+        done.  Returns the [B, max_new] output buffer and per-row
+        emitted-token counts."""
+        B = tok.shape[0]
+        max_new = gp.max_new_tokens
+        out = jnp.zeros((B, max_new), jnp.int32)
+        done = jnp.arange(B) >= n_active          # idle slots start done
+        count = jnp.zeros((B,), jnp.int32)
+        state = (jnp.zeros((), jnp.int32), tok, cache, done, out, count)
+
+        def cond(st):
+            t, _, _, done, _, _ = st
+            return (t < max_new) & ~jnp.all(done)
+
+        def body(st):
+            t, tok, cache, done, out, count = st
+            col = jnp.where(done, 0, tok[:, 0])
+            out = jax.lax.dynamic_update_slice_in_dim(
+                out, col[:, None], t, axis=1)
+            count = count + jnp.where(done, 0, 1)
+            if gp.eos_id is not None:
+                done = done | (tok[:, 0] == gp.eos_id)
+
+            def step(args):
+                tok, cache = args
+                logits, cache = self.model.decode_step(params, tok, cache)
+                return sample_token(logits, gp, key, t + 1), cache
+
+            # skip the trailing decode when this was the last recorded
+            # token (either the buffer is full or every row just hit EOS)
+            tok, cache = jax.lax.cond(
+                (t + 1 < max_new) & ~jnp.all(done), step,
+                lambda args: args, (tok, cache))
+            return (t + 1, tok, cache, done, out, count)
+
+        _, _, _, _, out, count = jax.lax.while_loop(cond, body, state)
+        return out, count
+
+    def _start(self, prompts, gen: GenerationParams, key):
+        """Shared prompt-side setup: pad, prefill, sample token 0."""
+        bucket = self.prompt_bucket(max(len(p) for p in prompts),
+                                    gen.max_new_tokens)
+        toks, first = self._pad_batch(prompts, bucket)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        tok, cache = self._prefill_sample(self.params, jnp.asarray(toks),
+                                          jnp.asarray(first), key, gp=gen)
+        return tok, cache, key
+
+    # ----------------------------------------------------------------- public
+
+    def generate(self, prompts: List[List[int]], max_new_tokens: int = 32,
+                 temperature: float = 0.0, key=None,
+                 eos_id: Optional[int] = None,
+                 gen: Optional[GenerationParams] = None
+                 ) -> List[List[int]]:
+        """Generate completions for up to ``batch_size`` prompts.
+
+        Either pass a ``GenerationParams`` via ``gen`` or the legacy
+        (max_new_tokens, temperature, eos_id) scalars.  Returns one
+        token list per prompt (empty input -> empty output); EOS, when
+        hit, is the last token of the row.
+        """
+        if gen is None:
+            gen = GenerationParams(max_new_tokens=max_new_tokens,
+                                   temperature=temperature, eos_id=eos_id)
+        if not prompts or gen.max_new_tokens <= 0:
+            return [[] for _ in prompts]
+        tok, cache, key = self._start(prompts, gen, key)
+        out, count = self._decode_loop(self.params, tok, cache, key,
+                                       jnp.int32(len(prompts)), gp=gen)
+        out = np.asarray(out)                       # the one host transfer
+        count = np.asarray(count)
+        return [out[i, :count[i]].tolist() for i in range(len(prompts))]
+
+    def generate_reference(self, prompts: List[List[int]],
+                           max_new_tokens: int = 32,
+                           temperature: float = 0.0, key=None,
+                           eos_id: Optional[int] = None,
+                           gen: Optional[GenerationParams] = None
+                           ) -> List[List[int]]:
+        """The original per-token Python loop (one host sync per token).
+        Kept as the semantics reference for parity tests and as the
+        baseline in benchmarks/serve_throughput.py."""
+        if gen is None:
+            gen = GenerationParams(max_new_tokens=max_new_tokens,
+                                   temperature=temperature, eos_id=eos_id)
+        if not prompts or gen.max_new_tokens <= 0:
+            return [[] for _ in prompts]
+        tok, cache, key = self._start(prompts, gen, key)
+        B = self.batch_size
         outs: List[List[int]] = [[] for _ in range(B)]
         done = [False] * B
-        tok = self._sample(logits, temperature, key, 0)
-        for t in range(max_new_tokens):
+        for t in range(gen.max_new_tokens):
             for i in range(len(prompts)):
-                tid = int(tok[i, 0])
+                tid = int(tok[i, 0])                # per-token host sync
                 if not done[i]:
                     outs[i].append(tid)
-                    if eos_id is not None and tid == eos_id:
+                    if gen.eos_id is not None and tid == gen.eos_id:
                         done[i] = True
             if all(done[:len(prompts)]):
                 break
             logits, cache = self._decode(self.params, tok, cache)
-            tok = self._sample(logits, temperature, key, t + 1)
+            tok = sample_token(logits, gen, key, t + 1)
         return outs[:len(prompts)]
-
-    def _sample(self, logits, temperature, key, step):
-        if temperature <= 0.0:
-            return jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        k = jax.random.fold_in(key if key is not None
-                               else jax.random.PRNGKey(0), step)
-        return jax.random.categorical(
-            k, logits.astype(jnp.float32) / temperature)[:, None].astype(jnp.int32)

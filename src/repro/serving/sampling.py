@@ -1,0 +1,73 @@
+"""On-device sampling shared by prefill and decode.
+
+``GenerationParams`` is a frozen (hashable) dataclass so the engine can
+pass it as a static jit argument: the compiled decode loop specializes
+on (greedy vs. sampled, top-k on/off, top-p on/off, max_new_tokens) and
+is cached per distinct parameter set, while everything numeric stays on
+device.  Filter order follows the common serving convention:
+temperature scaling, then top-k, then top-p, then categorical.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class GenerationParams:
+    """Static generation controls for one request / batch.
+
+    temperature <= 0 means greedy; top_k == 0 and top_p >= 1.0 disable
+    the respective filters.  ``eos_id`` is the stop token (None = run to
+    ``max_new_tokens``); emitted EOS tokens are included in the output,
+    matching the reference Python loop.
+    """
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    eos_id: Optional[int] = None
+
+
+def apply_top_k(logits: jax.Array, k: int) -> jax.Array:
+    """Mask everything below the k-th largest logit (per row)."""
+    vals = jax.lax.top_k(logits, k)[0]
+    thresh = vals[..., -1:]
+    return jnp.where(logits < thresh, _NEG_INF, logits)
+
+
+def apply_top_p(logits: jax.Array, p: float) -> jax.Array:
+    """Nucleus filter: keep the smallest prefix of the sorted
+    distribution with cumulative probability >= p (always >= 1 token)."""
+    srt = jnp.sort(logits, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(srt, axis=-1)
+    # exclusive cumsum: token i survives while the mass BEFORE it < p;
+    # the top token is kept unconditionally so p <= 0 degrades to greedy
+    keep = (jnp.cumsum(probs, axis=-1) - probs) < p
+    keep = keep.at[..., 0].set(True)
+    thresh = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1,
+                     keepdims=True)
+    return jnp.where(logits < thresh, _NEG_INF, logits)
+
+
+def sample_token(logits: jax.Array, gp: GenerationParams, key: jax.Array,
+                 step) -> jax.Array:
+    """[B,V] logits -> [B,1] int32 next token.
+
+    ``step`` (python int or traced int32) is folded into the key so each
+    decode position draws independent randomness from one base key.
+    """
+    if gp.temperature <= 0.0:
+        return jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    l = logits.astype(jnp.float32) / gp.temperature
+    if gp.top_k > 0:
+        l = apply_top_k(l, min(gp.top_k, l.shape[-1]))
+    if gp.top_p < 1.0:
+        l = apply_top_p(l, gp.top_p)
+    k = jax.random.fold_in(key, step)
+    return jax.random.categorical(k, l)[:, None].astype(jnp.int32)

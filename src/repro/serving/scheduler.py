@@ -1,0 +1,139 @@
+"""Request-level serving scheduler over a static-shape ServeEngine.
+
+The engine compiles per (batch, prompt-bucket) shape, so the scheduler's
+job is to pack an arbitrary stream of variable-length requests into
+those static slots with as little padding waste and as few distinct
+compilations as possible — the static-shape analogue of continuous
+batching:
+
+  * requests are grouped by their prompt bucket (``engine.prompt_bucket``),
+  * each ``step()`` runs one *wave*: up to ``batch_size`` requests from
+    the currently fullest bucket share one compiled generate call,
+  * slots freed by a finished wave are immediately reused by the next
+    wave (possibly from a different bucket — the jit cache keeps every
+    previously seen bucket warm).
+
+Replaces the fixed ``range(0, len(prompts), B)`` chunking that serving
+consumers (RAG pipeline, launchers, benchmarks) used to hand-roll.
+
+    queue = RequestQueue(engine, GenerationParams(max_new_tokens=24))
+    rids = queue.submit_all(token_prompts)
+    outs = queue.run()                    # {rid: [token, ...]}
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import jax
+
+from repro.serving.engine import ServeEngine
+from repro.serving.sampling import GenerationParams
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+
+
+@dataclass
+class Completion:
+    rid: int
+    tokens: List[int]
+    prompt_len: int
+    bucket: int
+    wave: int
+
+
+@dataclass
+class QueueStats:
+    waves: int = 0
+    requests: int = 0
+    tokens_out: int = 0
+    slots_run: int = 0        # batch slots dispatched (incl. idle padding)
+    slots_used: int = 0       # slots that held a real request
+
+    @property
+    def slot_utilization(self) -> float:
+        return self.slots_used / self.slots_run if self.slots_run else 0.0
+
+
+class RequestQueue:
+    """Packs submitted requests into engine waves; preserves completion
+    identity via request ids (results come back in submission order
+    regardless of how waves were packed)."""
+
+    def __init__(self, engine: ServeEngine,
+                 gen: Optional[GenerationParams] = None, *, key=None):
+        self.engine = engine
+        self.gen = gen or GenerationParams()
+        self._key = key if key is not None else jax.random.PRNGKey(0)
+        self._pending: List[Request] = []
+        self._done: Dict[int, Completion] = {}
+        self._next_rid = 0
+        self.stats = QueueStats()
+
+    # -------------------------------------------------------------- intake
+
+    def submit(self, prompt: Sequence[int]) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._pending.append(Request(rid, list(prompt)))
+        return rid
+
+    def submit_all(self, prompts: Iterable[Sequence[int]]) -> List[int]:
+        return [self.submit(p) for p in prompts]
+
+    def pending(self) -> int:
+        return len(self._pending)
+
+    # ------------------------------------------------------------ scheduling
+
+    def _pick_wave(self) -> List[Request]:
+        """Fullest-bucket-first: maximizes slot utilization and amortizes
+        each prefill compilation over the most requests."""
+        by_bucket: Dict[int, List[Request]] = defaultdict(list)
+        for r in self._pending:
+            b = self.engine.prompt_bucket(len(r.prompt),
+                                          self.gen.max_new_tokens)
+            by_bucket[b].append(r)
+        bucket = max(by_bucket, key=lambda b: (len(by_bucket[b]), -b))
+        return by_bucket[bucket][:self.engine.batch_size]
+
+    def step(self) -> List[Completion]:
+        """Pack and run one wave; returns its completions (empty list if
+        nothing is pending)."""
+        if not self._pending:
+            return []
+        wave = self._pick_wave()
+        taken = {r.rid for r in wave}
+        self._pending = [r for r in self._pending if r.rid not in taken]
+        wave_key = jax.random.fold_in(self._key, self.stats.waves)
+        outs = self.engine.generate([r.prompt for r in wave], gen=self.gen,
+                                    key=wave_key)
+        bucket = self.engine.prompt_bucket(
+            max(len(r.prompt) for r in wave), self.gen.max_new_tokens)
+        completions = []
+        for r, toks in zip(wave, outs):
+            c = Completion(r.rid, toks, len(r.prompt), bucket,
+                           self.stats.waves)
+            self._done[r.rid] = c
+            completions.append(c)
+        self.stats.waves += 1
+        self.stats.requests += len(wave)
+        self.stats.tokens_out += sum(len(t) for t in outs)
+        self.stats.slots_run += self.engine.batch_size
+        self.stats.slots_used += len(wave)
+        return completions
+
+    def run(self) -> Dict[int, List[int]]:
+        """Drain the queue; returns {rid: generated tokens} for every
+        completed request (including ones finished in earlier steps)."""
+        while self._pending:
+            self.step()
+        return {rid: c.tokens for rid, c in self._done.items()}
+
+    def result(self, rid: int) -> Completion:
+        return self._done[rid]

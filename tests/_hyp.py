@@ -1,0 +1,70 @@
+"""Hypothesis, or a tiny deterministic fallback when it isn't installed.
+
+The seed image ships without ``hypothesis``, which used to fail the
+whole suite at collection.  Property tests import ``given/settings/st``
+from here instead: with hypothesis present they run unchanged; without
+it, ``given`` replays each test over a fixed number of deterministic
+samples drawn from minimal strategy stand-ins (covering only the
+strategy surface this suite uses: integers, floats, lists,
+sampled_from).
+"""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:
+    import inspect
+
+    import numpy as np
+
+    _N_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:                                        # noqa: N801
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+        @staticmethod
+        def floats(lo, hi):
+            return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            return _Strategy(lambda rng: [
+                elem.draw(rng)
+                for _ in range(int(rng.integers(min_size, max_size + 1)))])
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    def settings(**_kw):
+        return lambda f: f
+
+    def given(*strats):
+        def deco(f):
+            # like hypothesis, strategies fill the RIGHTMOST parameters;
+            # anything to their left (e.g. pytest fixtures) passes through
+            sig = inspect.signature(f)
+            params = list(sig.parameters.values())
+            strat_names = [p.name for p in params[len(params) - len(strats):]]
+
+            def wrapper(*args, **kwargs):
+                rng = np.random.default_rng(0)
+                for _ in range(_N_EXAMPLES):
+                    draws = {n: s.draw(rng)
+                             for n, s in zip(strat_names, strats)}
+                    f(*args, **kwargs, **draws)
+
+            # expose only the non-strategy params so pytest still injects
+            # fixtures for them (and doesn't see the strategy args)
+            wrapper.__signature__ = sig.replace(
+                parameters=params[:len(params) - len(strats)])
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+        return deco

@@ -5,6 +5,11 @@ import jax
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running integration tests")
+
+
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)

@@ -13,13 +13,12 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
 import json
 import jax
-from jax.sharding import AxisType
 from repro.configs import get_config, INPUT_SHAPES
 from repro.launch.specs import build_step
 from repro.launch import roofline
 
-mesh = jax.make_mesh((4, 4), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4, 4), ("data", "model"))
 cfg = get_config("olmo-1b")
 shape = INPUT_SHAPES["decode_32k"]
 step, args, in_sh, out_sh, meta = build_step(cfg, shape, mesh)

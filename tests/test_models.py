@@ -3,8 +3,7 @@ mLSTM == sequential, MoE dropless consistency, cache semantics."""
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.configs import get_smoke_config
 from repro.models import Model, ssm

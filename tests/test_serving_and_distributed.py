@@ -7,7 +7,7 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.models import Model
-from repro.serving.engine import ServeEngine
+from repro.serving import GenerationParams, RequestQueue, ServeEngine
 
 
 def test_engine_generates(key):
@@ -17,6 +17,11 @@ def test_engine_generates(key):
     eng = ServeEngine(cfg, params, max_len=64, batch_size=4)
     outs = eng.generate([[1, 2, 3], [4, 5, 6, 7, 8]], max_new_tokens=5)
     assert len(outs) == 2 and all(len(o) == 5 for o in outs)
+    # same prompts through the request-level scheduler
+    queue = RequestQueue(eng, GenerationParams(max_new_tokens=5))
+    rids = queue.submit_all([[1, 2, 3], [4, 5, 6, 7, 8]])
+    packed = queue.run()
+    assert [packed[r] for r in rids] == outs
 
 
 def test_left_padding_is_masked(key):
@@ -40,8 +45,8 @@ def test_left_padding_is_masked(key):
 def test_distributed_topk_single_device():
     from repro.distributed.collectives import distributed_topk
     from repro.kernels import ref
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1, 1)
     key = jax.random.PRNGKey(0)
     q = jax.random.normal(key, (5, 16))
     c = jax.random.normal(jax.random.fold_in(key, 1), (64, 16))
@@ -53,8 +58,8 @@ def test_distributed_topk_single_device():
 def test_flash_decode_seq_sharded_single_device(key):
     from repro.distributed.collectives import flash_decode_seq_sharded
     from repro.models.layers import decode_attention
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1, 1)
     B, H, KV, S, hd = 2, 4, 2, 32, 16
     ks = jax.random.split(key, 3)
     q = jax.random.normal(ks[0], (B, 1, H, hd))
@@ -99,8 +104,8 @@ def test_expert_parallel_moe_matches_tp(key):
     from repro.configs import get_smoke_config
     from repro.models.moe import apply_moe, init_moe
     from repro.distributed.expert_parallel import apply_moe_expert_parallel
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1, 1)
     cfg = get_smoke_config("qwen3-moe-30b-a3b")
     p = init_moe(key, cfg, jnp.float32)
     x = jax.random.normal(key, (2, 12, cfg.d_model), jnp.float32)
