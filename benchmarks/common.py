@@ -1,6 +1,10 @@
-"""Shared benchmark scaffolding: cached testbed, CSV/markdown emitters."""
+"""Shared benchmark scaffolding: cached testbed, CSV/markdown/JSON
+emitters.  Every ``Bench.finish`` writes ``BENCH_<name>.json`` next to
+the markdown so the perf trajectory can be diffed across PRs."""
 from __future__ import annotations
 
+import hashlib
+import json
 import os
 import time
 from typing import Dict, List, Optional, Sequence
@@ -32,16 +36,25 @@ def fresh_testbed(seed: int = 0, profile: bool = True,
 
 
 class Bench:
-    """Collects (name, value) rows; prints CSV and writes markdown."""
+    """Collects (name, value) rows; prints CSV, writes markdown plus a
+    machine-readable ``BENCH_<name>.json`` (rows + config fingerprint)
+    so the perf trajectory is trackable across PRs."""
 
-    def __init__(self, name: str):
+    def __init__(self, name: str, config: Optional[Dict] = None):
         self.name = name
+        self.config = dict(config or {})
         self.rows: List[tuple] = []
         self.t0 = time.time()
 
     def add(self, *row):
         self.rows.append(row)
         print(",".join(str(r) for r in row), flush=True)
+
+    def fingerprint(self) -> str:
+        """Stable hash of the benchmark configuration, so trajectory
+        diffs only compare like-for-like runs."""
+        blob = json.dumps(self.config, sort_keys=True, default=str)
+        return hashlib.sha256(blob.encode()).hexdigest()[:12]
 
     def finish(self, header: Sequence[str]):
         os.makedirs(OUTDIR, exist_ok=True)
@@ -54,8 +67,18 @@ class Bench:
                 f.write("| " + " | ".join(
                     f"{v:.4f}" if isinstance(v, float) else str(v)
                     for v in row) + " |\n")
-        print(f"[{self.name}] wrote {path} ({time.time() - self.t0:.0f}s)",
-              flush=True)
+        jpath = os.path.join(OUTDIR, f"BENCH_{self.name}.json")
+        with open(jpath, "w") as f:
+            json.dump({
+                "name": self.name,
+                "elapsed_s": round(time.time() - self.t0, 3),
+                "config": self.config,
+                "fingerprint": self.fingerprint(),
+                "header": list(header),
+                "rows": [list(r) for r in self.rows],
+            }, f, indent=1, default=float)
+        print(f"[{self.name}] wrote {path} and {jpath} "
+              f"({time.time() - self.t0:.0f}s)", flush=True)
 
 
 def drop_weighted_quality(results) -> tuple:

@@ -40,7 +40,8 @@ def kernel_microbench() -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="table1|table2|table3|fig5|fig6|motivation|kernels")
+                    help="table1|table2|table3|fig5|fig6|motivation|"
+                         "ablation|kernels|cluster")
     args = ap.parse_args()
     sections = {
         "table1": lambda: __import__("benchmarks.table1_latency_fit",
@@ -58,6 +59,8 @@ def main() -> None:
         "ablation": lambda: __import__("benchmarks.ablation_ppo",
                                        fromlist=["main"]).main(),
         "kernels": kernel_microbench,
+        "cluster": lambda: __import__("benchmarks.cluster_e2e",
+                                      fromlist=["main"]).main([]),
     }
     todo = [args.only] if args.only else list(sections)
     for name in todo:

@@ -1,0 +1,8 @@
+"""Live edge-cluster runtime: the hierarchical scheduler driving real
+per-node ServeEngines end-to-end (measured latency/quality, no oracles).
+"""
+from repro.cluster.node import LiveEdgeNode, LiveNodeStats  # noqa: F401
+from repro.cluster.replay import (LiveWorkload, ReplayReport,  # noqa: F401
+                                  replay_trace)
+from repro.cluster.runtime import (ClusterRuntime,  # noqa: F401
+                                   ClusterSlotMetrics)

@@ -38,6 +38,9 @@ class Query:
     domain: int
     embedding: np.ndarray
     qid: int = 0
+    # live-path payload (empty for the oracle-driven simulator)
+    question: str = ""
+    reference: str = ""
 
 
 @dataclass
@@ -47,6 +50,9 @@ class QueryResult:
     model: str
     quality: float
     dropped: bool
+    # live-path measurements (0/"" for the oracle-driven simulator)
+    latency_s: float = 0.0
+    answer: str = ""
 
 
 def _apportion(n: int, weights: np.ndarray) -> np.ndarray:

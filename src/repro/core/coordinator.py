@@ -14,6 +14,7 @@ import numpy as np
 from repro.core.cluster import EdgeNode, Query, QueryResult
 from repro.core.identifier import OnlineQueryIdentifier
 from repro.core.inter_node import inter_node_schedule
+from repro.core.protocols import QueryRouter, SchedulableNode
 
 
 @dataclass
@@ -25,7 +26,13 @@ class SlotMetrics:
 
 
 class Coordinator:
-    def __init__(self, nodes: List[EdgeNode], identifier,
+    """Drives any ``SchedulableNode`` sequence — the oracle-driven
+    ``EdgeNode`` simulator here, or ``cluster.node.LiveEdgeNode`` via
+    the ``ClusterRuntime`` subclass (same routing, measured execution).
+    """
+
+    def __init__(self, nodes: Sequence[SchedulableNode],
+                 identifier: QueryRouter,
                  *, use_inter_node: bool = True, seed: int = 0,
                  node_schedulers: Optional[Dict[int, object]] = None):
         self.nodes = nodes
@@ -46,34 +53,48 @@ class Coordinator:
             caps.append(node.capacity(slo_s) if node.capacity else 1e9)
         return np.asarray(caps)
 
+    def _route(self, probs: np.ndarray, slo_s: float):
+        """Queries -> node assignment: capacity-aware Algorithm 1, or pure
+        identifier sampling under the ``--no-inter-node`` ablation."""
+        if self.use_inter_node:
+            return inter_node_schedule(
+                probs, self._capacities(slo_s), self._rng)
+        cum = probs.cumsum(1)
+        r = self._rng.random((len(probs), 1))
+        assign = (r > cum).sum(1).clip(0, len(self.nodes) - 1)
+        props = np.bincount(assign, minlength=len(self.nodes)) / len(probs)
+        return assign, props
+
+    def _dispatch(self, queries: Sequence[Query], assign: np.ndarray,
+                  slo_s: float) -> List[QueryResult]:
+        results: List[QueryResult] = []
+        for n, node in enumerate(self.nodes):
+            idx = np.where(assign == n)[0]
+            results += node.process_slot(
+                [queries[i] for i in idx], slo_s,
+                scheduler=self.node_schedulers.get(n))
+        return results
+
+    def _feedback(self, embs: np.ndarray, assign: np.ndarray,
+                  queries: Sequence[Query], results: Sequence[QueryResult]
+                  ) -> np.ndarray:
+        """Realized composite quality per query (dropped -> 0) into the
+        identifier's buffer; triggers a PPO update when due."""
+        by_qid = {r.qid: r for r in results}
+        scores = np.array([by_qid[q.qid].quality for q in queries])
+        self.identifier.feedback(embs, assign, scores)
+        self.identifier.maybe_update()
+        return scores
+
     def run_slot(self, queries: Sequence[Query], slo_s: float
                  ) -> SlotMetrics:
         if not queries:
             return SlotMetrics(0.0, 0.0, np.zeros(len(self.nodes)), 0)
         embs = np.stack([q.embedding for q in queries])
         probs = self.identifier.identify(embs)
-        if self.use_inter_node:
-            assign, props = inter_node_schedule(
-                probs, self._capacities(slo_s), self._rng)
-        else:
-            # pure identifier sampling, no capacity awareness
-            cum = probs.cumsum(1)
-            r = self._rng.random((len(queries), 1))
-            assign = (r > cum).sum(1).clip(0, len(self.nodes) - 1)
-            props = np.bincount(assign, minlength=len(self.nodes)) \
-                / len(queries)
-        results: List[QueryResult] = []
-        for n, node in enumerate(self.nodes):
-            idx = np.where(assign == n)[0]
-            node_queries = [queries[i] for i in idx]
-            results += node.process_slot(
-                node_queries, slo_s,
-                scheduler=self.node_schedulers.get(n))
-        # feedback: realized composite quality (dropped -> 0)
-        by_qid = {r.qid: r for r in results}
-        scores = np.array([by_qid[q.qid].quality for q in queries])
-        self.identifier.feedback(embs, assign, scores)
-        self.identifier.maybe_update()
+        assign, props = self._route(probs, slo_s)
+        results = self._dispatch(queries, assign, slo_s)
+        self._feedback(embs, assign, queries, results)
         qual = float(np.mean([r.quality for r in results if not r.dropped])
                      ) if any(not r.dropped for r in results) else 0.0
         drop = float(np.mean([r.dropped for r in results]))

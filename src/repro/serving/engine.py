@@ -28,6 +28,7 @@ host sync per token) for parity tests and the throughput benchmark.
 """
 from __future__ import annotations
 
+import warnings
 from typing import List, Optional, Tuple
 
 import jax
@@ -65,6 +66,31 @@ class ServeEngine:
                                     static_argnames=("gp",))
 
     # ---------------------------------------------------------------- batching
+
+    def max_prompt_len(self, max_new_tokens: int = 0) -> int:
+        """Longest prompt the preallocated cache can hold while leaving
+        room for ``max_new_tokens`` decode steps."""
+        return max(1, self.max_len - max(0, max_new_tokens))
+
+    def clip_prompts(self, prompts: List[List[int]], max_new_tokens: int
+                     ) -> List[List[int]]:
+        """Truncate-left any prompt longer than the cache allows (keeps
+        the question-side suffix of RAG prompts) with a warning, instead
+        of failing with a shape error inside jit."""
+        cap = self.max_prompt_len(max_new_tokens)
+        out, clipped = [], 0
+        for p in prompts:
+            if len(p) > cap:
+                out.append(list(p)[-cap:])
+                clipped += 1
+            else:
+                out.append(p)
+        if clipped:
+            warnings.warn(
+                f"{clipped} prompt(s) exceeded max_len={self.max_len} - "
+                f"max_new_tokens={max_new_tokens}; truncated-left to "
+                f"{cap} tokens", stacklevel=3)
+        return out
 
     def prompt_bucket(self, prompt_len: int, max_new_tokens: int = 0) -> int:
         """Padded prompt length for a request: the smallest power-of-two
@@ -157,6 +183,12 @@ class ServeEngine:
 
     def _start(self, prompts, gen: GenerationParams, key):
         """Shared prompt-side setup: pad, prefill, sample token 0."""
+        if gen.max_new_tokens >= self.max_len:
+            raise ValueError(
+                f"max_new_tokens={gen.max_new_tokens} does not fit the "
+                f"engine cache (max_len={self.max_len}); raise max_len or "
+                f"lower max_new_tokens")
+        prompts = self.clip_prompts(prompts, gen.max_new_tokens)
         bucket = self.prompt_bucket(max(len(p) for p in prompts),
                                     gen.max_new_tokens)
         toks, first = self._pad_batch(prompts, bucket)

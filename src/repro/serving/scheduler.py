@@ -69,6 +69,12 @@ class RequestQueue:
                  gen: Optional[GenerationParams] = None, *, key=None):
         self.engine = engine
         self.gen = gen or GenerationParams()
+        if self.gen.max_new_tokens >= engine.max_len:
+            # reject the impossible (engine, gen) pair up front instead
+            # of accepting (and clipping) requests that can never run
+            raise ValueError(
+                f"max_new_tokens={self.gen.max_new_tokens} does not fit "
+                f"the engine cache (max_len={engine.max_len})")
         self._key = key if key is not None else jax.random.PRNGKey(0)
         self._pending: List[Request] = []
         self._done: Dict[int, Completion] = {}
@@ -80,7 +86,11 @@ class RequestQueue:
     def submit(self, prompt: Sequence[int]) -> int:
         rid = self._next_rid
         self._next_rid += 1
-        self._pending.append(Request(rid, list(prompt)))
+        # clip at intake so bucketing and waves see the served length
+        # (truncate-left with a warning instead of a shape error in jit)
+        prompt, = self.engine.clip_prompts([list(prompt)],
+                                           self.gen.max_new_tokens)
+        self._pending.append(Request(rid, prompt))
         return rid
 
     def submit_all(self, prompts: Iterable[Sequence[int]]) -> List[int]:

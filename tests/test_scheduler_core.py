@@ -82,6 +82,54 @@ def test_pool_manager_lifecycle():
     assert rep.max_tl == pytest.approx(MODEL_SPECS[small].load_time_s)
 
 
+def test_pool_manager_epsilon_snap_no_reload():
+    """An R change within epsilon_1 is not a significant change: the
+    model keeps serving (no RLD, no load time) but the tracked R still
+    moves to the new value."""
+    pool = pool_for_family("llama")
+    mgr = ModelPoolManager(pool, num_gpus=1, eps=0.05)
+    m = pool[0].name
+    mgr.apply({(m, 0): 0.30})
+    rep = mgr.apply({(m, 0): 0.33})              # |dR| = 0.03 <= eps
+    assert rep.max_tl == 0.0 and not rep.reloads and not rep.loads
+    assert mgr.R[0][m] == pytest.approx(0.33)
+    rep = mgr.apply({(m, 0): 0.40})              # |dR| = 0.07 > eps -> RLD
+    assert (m, 0) in rep.reloads
+    assert rep.max_tl == pytest.approx(MODEL_SPECS[m].load_time_s)
+
+
+def test_pool_manager_unload_then_reload_consecutive_slots():
+    """Unloading is free, but bringing the model back next slot is a
+    fresh LD that pays l_m again (no warm-cache shortcut)."""
+    pool = pool_for_family("llama")
+    mgr = ModelPoolManager(pool, num_gpus=1)
+    m = pool[0].name
+    rep = mgr.apply({(m, 0): 0.3})
+    assert (m, 0) in rep.loads
+    rep = mgr.apply({})                          # ULD: ~free
+    assert (m, 0) in rep.unloads and rep.max_tl == 0.0
+    assert mgr.deployed(0) == {}
+    rep = mgr.apply({(m, 0): 0.3})               # back -> full LD cost
+    assert (m, 0) in rep.loads and not rep.reloads
+    assert rep.max_tl == pytest.approx(MODEL_SPECS[m].load_time_s)
+
+
+def test_pool_manager_over_memory_boundaries():
+    """Exactly-full GPUs pass; anything past gpu_mem (or below the
+    model's startup minimum) is rejected before mutating state."""
+    pool = pool_for_family("llama")
+    mgr = ModelPoolManager(pool, num_gpus=2)
+    a, b = pool[0].name, pool[1].name
+    mgr.apply({(a, 0): 0.5, (b, 0): 0.5})        # sum == gpu_mem: fine
+    with pytest.raises(AssertionError):
+        mgr.apply({(a, 0): 0.5, (b, 0): 0.52})
+    # failed validation must not have clobbered the deployment state
+    assert mgr.deployed(0) == {a: 0.5, b: 0.5}
+    # per-GPU accounting: same total split across GPUs is fine
+    rep = mgr.apply({(a, 0): 0.5, (b, 1): 0.52})
+    assert (b, 1) in rep.reloads or (b, 1) in rep.loads
+
+
 def test_pool_manager_memory_validation():
     pool = pool_for_family("llama")
     mgr = ModelPoolManager(pool, num_gpus=1)

@@ -156,6 +156,42 @@ def test_generate_empty_batch(key):
     assert eng.generate_reference([[1, 2]], max_new_tokens=0) == [[]]
 
 
+def test_overlong_prompt_truncates_left_with_warning(key):
+    """A prompt longer than the cache allows must be truncated-left (the
+    suffix survives) with a warning — not fail with a shape error in
+    jit."""
+    eng = make_engine("llama3-8b", key, max_len=32)
+    long = list(range(1, 61))                     # 60 tokens >> 32 cache
+    with pytest.warns(UserWarning, match="truncated-left"):
+        outs = eng.generate([long], max_new_tokens=4)
+    assert len(outs[0]) == 4
+    # equivalent to generating from the kept suffix directly
+    kept = long[-eng.max_prompt_len(4):]
+    assert outs[0] == eng.generate([kept], max_new_tokens=4)[0]
+    # the reference loop applies the same clipping
+    with pytest.warns(UserWarning, match="truncated-left"):
+        ref = eng.generate_reference([long], max_new_tokens=4)
+    assert ref[0] == outs[0]
+
+
+def test_overlong_prompt_truncates_at_queue_submit(key):
+    eng = make_engine("llama3-8b", key, max_len=32)
+    queue = RequestQueue(eng, GenerationParams(max_new_tokens=4))
+    with pytest.warns(UserWarning, match="truncated-left"):
+        rid = queue.submit(list(range(1, 101)))
+    outs = queue.run()                            # no shape error
+    assert len(outs[rid]) == 4
+
+
+def test_decode_budget_must_fit_cache(key):
+    eng = make_engine("llama3-8b", key, max_len=16)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.generate([[1, 2, 3]], max_new_tokens=16)
+    # the queue rejects the impossible pair up front, before any submit
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        RequestQueue(eng, GenerationParams(max_new_tokens=16))
+
+
 def test_rag_pipeline_scores_and_queue(key):
     """RAGResult carries the real per-chunk index scores and answers come
     back in question order through the RequestQueue."""
