@@ -2,13 +2,18 @@
 scheduling vs. the capacity-unaware ablation, on identical hardware,
 corpus split, and workload trace.
 
-Both modes drive REAL per-node engines (measured retrieval + prefill +
+All modes drive REAL per-node engines (measured retrieval + prefill +
 decode latency, measured answer quality) through ``ClusterRuntime`` —
-the live analogue of the simulator's Table-II comparison.  Emits
-CSV/markdown plus ``BENCH_cluster_e2e.json`` (quality, drop rate,
-p50/p95 latency, load imbalance per mode).
+the live analogue of the simulator's Table-II comparison.  With
+``--federated`` a third mode adds sketch-routed cross-node retrieval:
+the ``remote_gold`` column counts queries whose gold context was
+fetched from a *remote* node's shard — always 0 in the node-local
+modes, where a query landing on a node without its gold document
+simply gets the wrong context.  Emits CSV/markdown plus
+``BENCH_cluster_e2e.json``.
 
     PYTHONPATH=src python -m benchmarks.cluster_e2e
+    PYTHONPATH=src python -m benchmarks.cluster_e2e --federated
     PYTHONPATH=src python -m benchmarks.cluster_e2e --nodes 3 --slots 4
 """
 from __future__ import annotations
@@ -22,13 +27,15 @@ from repro.cluster import ClusterRuntime, LiveWorkload, replay_trace
 from repro.launch.cluster_serve import NODE_ARCHS, build_cluster
 
 
-def run_mode(use_inter_node: bool, args) -> dict:
+def run_mode(args, *, use_inter_node: bool = True,
+             federated: bool = False) -> dict:
     """Fresh cluster + identifier per mode (no learning carry-over);
-    the same seeds give both modes identical corpora and arrivals."""
+    the same seeds give all modes identical corpora and arrivals."""
     nodes, qas, tok, encoder, ident, _ = build_cluster(
         args.nodes, smoke=True, entities=args.entities,
         max_len=args.max_len, new_tokens=args.new_tokens, seed=args.seed,
-        update_threshold=max(4, args.per_slot))
+        update_threshold=max(4, args.per_slot),
+        index_kind=args.index, federated=federated, fanout=args.fanout)
     runtime = ClusterRuntime(nodes, ident, use_inter_node=use_inter_node,
                              seed=args.seed)
     runtime.initialize()
@@ -36,7 +43,10 @@ def run_mode(use_inter_node: bool, args) -> dict:
     report = replay_trace(runtime, workload, n_slots=args.slots,
                           slo_s=args.slo, base_volume=args.per_slot,
                           trace=args.trace, seed=args.seed + 3)
-    return report.summary()
+    s = report.summary()
+    s["remote_gold"] = sum(n.stats.remote_gold for n in nodes)
+    s["remote_contexts"] = sum(n.stats.remote_contexts for n in nodes)
+    return s
 
 
 def main(argv=None):
@@ -53,6 +63,12 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=192)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--index", default="flat", choices=["flat", "ivf"])
+    ap.add_argument("--fanout", type=int, default=2)
+    ap.add_argument("--federated", action="store_true",
+                    help="also run the cross-node federated-retrieval "
+                         "mode (scheduled routing + sketch-routed "
+                         "remote shards)")
     args = ap.parse_args(argv)
 
     bench = Bench("cluster_e2e", config={
@@ -60,18 +76,25 @@ def main(argv=None):
         "per_slot": args.per_slot, "slo_s": args.slo,
         "trace": args.trace, "entities": args.entities,
         "archs": list(NODE_ARCHS[:args.nodes]),
+        "index": args.index, "federated": args.federated,
         "jax": jax.__version__, "device": jax.devices()[0].platform,
     })
     header = ["mode", "quality", "drop_rate", "p50_s", "p95_s",
-              "load_imbalance", "queries"]
+              "load_imbalance", "queries", "remote_gold"]
+    modes = [("scheduled", dict(use_inter_node=True)),
+             ("no_inter_node", dict(use_inter_node=False))]
+    if args.federated:
+        modes.append(("federated", dict(use_inter_node=True,
+                                        federated=True)))
     gap = {}
-    for mode, inter in (("scheduled", True), ("no_inter_node", False)):
-        s = run_mode(inter, args)
+    for mode, kw in modes:
+        s = run_mode(args, **kw)
         gap[mode] = s
         bench.add(mode, round(s["quality_mean"], 4),
                   round(s["drop_rate"], 4), round(s["latency_p50_s"], 3),
                   round(s["latency_p95_s"], 3),
-                  round(s["load_imbalance"], 3), s["queries"])
+                  round(s["load_imbalance"], 3), s["queries"],
+                  s["remote_gold"])
     bench.add("gap_sched_minus_ablation",
               round(gap["scheduled"]["quality_mean"]
                     - gap["no_inter_node"]["quality_mean"], 4),
@@ -82,7 +105,20 @@ def main(argv=None):
               round(gap["scheduled"]["latency_p95_s"]
                     - gap["no_inter_node"]["latency_p95_s"], 3),
               round(gap["scheduled"]["load_imbalance"]
-                    - gap["no_inter_node"]["load_imbalance"], 3), 0)
+                    - gap["no_inter_node"]["load_imbalance"], 3), 0, 0)
+    if args.federated:
+        f, s = gap["federated"], gap["scheduled"]
+        bench.add("gap_federated_minus_scheduled",
+                  round(f["quality_mean"] - s["quality_mean"], 4),
+                  round(f["drop_rate"] - s["drop_rate"], 4),
+                  round(f["latency_p50_s"] - s["latency_p50_s"], 3),
+                  round(f["latency_p95_s"] - s["latency_p95_s"], 3),
+                  round(f["load_imbalance"] - s["load_imbalance"], 3),
+                  0, f["remote_gold"])
+        print(f"federated mode: {f['remote_gold']} queries answered with "
+              f"gold context from a REMOTE shard "
+              f"({f['remote_contexts']} remote contexts merged); "
+              f"node-local modes: 0 by construction", flush=True)
     bench.finish(header)
 
 

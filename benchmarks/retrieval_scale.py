@@ -1,0 +1,147 @@
+"""Retrieval scaling: exact flat scan vs IVF ANN vs federated shards.
+
+For each corpus size, measures per-search wall time, recall@k against
+the flat baseline, and the fraction of documents actually scored:
+
+  * ``flat``       — exact O(N·d) scan (``FlatIndex``)
+  * ``ivf``        — k-means quantizer + probed lists at default nprobe
+  * ``federated``  — the corpus sharded over 3 stub nodes, sketch-routed
+                     fanout-2 probes with partial top-k merge (recall
+                     here counts the planted gold doc, which usually
+                     lives on a *remote* shard relative to the origin)
+
+The corpus is a gaussian-mixture embedding set (cluster structure like
+the domain corpora, but synthesizable at any size); each query is a
+noisy copy of a random doc, so the gold neighbour is known.  Emits
+``experiments/bench/BENCH_retrieval_scale.json`` via the shared
+``Bench`` writer.
+
+    PYTHONPATH=src python -m benchmarks.retrieval_scale --smoke
+    PYTHONPATH=src python -m benchmarks.retrieval_scale \
+        --sizes 2000,8000,32000
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import Bench
+from repro.cluster.federation import FederatedRetriever
+from repro.retrieval.index import FlatIndex, build_index
+
+
+def synth_corpus(n_docs: int, dim: int, n_queries: int, *,
+                 n_clusters: int = 24, noise: float = 0.25, seed: int = 0):
+    """Unit-norm gaussian-mixture docs + queries perturbed from random
+    docs.  Returns (doc_embs, query_embs, gold doc id per query)."""
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((n_clusters, dim)).astype(np.float32)
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    assign = rng.integers(n_clusters, size=n_docs)
+    # noise is the perturbation NORM relative to the unit centers (a raw
+    # standard normal in dim d has norm ~sqrt(d), which would drown them)
+    scale = noise / np.sqrt(dim)
+    docs = centers[assign] + scale * rng.standard_normal(
+        (n_docs, dim)).astype(np.float32)
+    docs /= np.linalg.norm(docs, axis=1, keepdims=True)
+    gold = rng.integers(n_docs, size=n_queries)
+    queries = docs[gold] + 0.5 * scale * rng.standard_normal(
+        (n_queries, dim)).astype(np.float32)
+    queries /= np.linalg.norm(queries, axis=1, keepdims=True)
+    return docs, queries, gold, assign
+
+
+def _timed_search(index, queries, k, repeats=3):
+    index.search(queries, k)                 # train + jit warm-up
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        s, i = index.search(queries, k)
+    return (time.perf_counter() - t0) / repeats, i
+
+
+class _Shard:
+    """Bare (node_id, index) holder — federation needs nothing else."""
+
+    def __init__(self, node_id, index):
+        self.node_id = node_id
+        self.index = index
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default=None,
+                    help="comma-separated corpus sizes")
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--k", type=int, default=5)
+    ap.add_argument("--queries", type=int, default=32)
+    ap.add_argument("--shards", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI")
+    args = ap.parse_args(argv)
+    sizes = [int(s) for s in args.sizes.split(",")] if args.sizes else \
+        ([512, 2048] if args.smoke else [2000, 8000, 32000])
+
+    bench = Bench("retrieval_scale", config={
+        "sizes": sizes, "dim": args.dim, "k": args.k,
+        "queries": args.queries, "shards": args.shards,
+        "seed": args.seed})
+    header = ["backend", "n_docs", "ms_per_batch", "recall_at_k",
+              "scored_frac", "speedup_vs_flat"]
+    for n in sizes:
+        docs, queries, gold, cluster = synth_corpus(
+            n, args.dim, args.queries, seed=args.seed)
+        ids = np.arange(n)
+
+        flat = FlatIndex(args.dim)
+        flat.add(docs, list(ids))
+        t_flat, fi = _timed_search(flat, queries, args.k)
+        flat_sets = [set(int(x) for x in row) for row in fi]
+        gold_rec = np.mean([g in s for g, s in zip(gold, flat_sets)])
+        bench.add("flat", n, round(t_flat * 1e3, 2), round(gold_rec, 3),
+                  1.0, 1.0)
+
+        ivf = build_index(args.dim, "ivf")
+        ivf.add(docs, list(ids))
+        t_ivf, ii = _timed_search(ivf, queries, args.k)
+        rec = np.mean([len(set(int(x) for x in row) & s) / args.k
+                       for row, s in zip(ii, flat_sets)])
+        bench.add("ivf", n, round(t_ivf * 1e3, 2), round(rec, 3),
+                  round(ivf.last_scored_frac, 3),
+                  round(t_flat / max(t_ivf, 1e-9), 2))
+
+        # shard the corpus by embedding cluster (domain-skewed, like the
+        # paper's edge partition); origin shard 0, gold mostly remote
+        shards = []
+        for s in range(args.shards):
+            idx = FlatIndex(args.dim)
+            sel = np.where(cluster % args.shards == s)[0]
+            idx.add(docs[sel], list(ids[sel]))
+            shards.append(_Shard(s, idx))
+        fed = FederatedRetriever(shards, fanout=2, n_centroids=8,
+                                 seed=args.seed)
+        fed.retrieve(0, queries, args.k)   # warm per-shard jit shapes
+        t0 = time.perf_counter()
+        ctxs, srcs = fed.retrieve(0, queries, args.k)
+        t_fed = time.perf_counter() - t0
+        rec = np.mean([g in {int(c) for c in ctx}
+                       for g, ctx in zip(gold, ctxs)])
+        remote = sum(s != 0 for row in srcs for s in row) / max(
+            sum(len(row) for row in srcs), 1)
+        # measured scan fraction: docs held by each query's probed
+        # shards (flat backends scan their whole shard) over the corpus
+        probe_sets = fed.route(0, queries)
+        scored = np.mean([sum(len(shards[nid].index) for nid in nids)
+                          for nids in probe_sets]) / n
+        bench.add("federated", n, round(t_fed * 1e3, 2), round(rec, 3),
+                  round(scored, 3),
+                  round(t_flat / max(t_fed, 1e-9), 2))
+        print(f"  federated: {remote:.0%} of merged contexts came from "
+              f"remote shards", flush=True)
+    bench.finish(header)
+
+
+if __name__ == "__main__":
+    main()

@@ -41,7 +41,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="table1|table2|table3|fig5|fig6|motivation|"
-                         "ablation|kernels|cluster")
+                         "ablation|kernels|cluster|retrieval")
     args = ap.parse_args()
     sections = {
         "table1": lambda: __import__("benchmarks.table1_latency_fit",
@@ -61,6 +61,8 @@ def main() -> None:
         "kernels": kernel_microbench,
         "cluster": lambda: __import__("benchmarks.cluster_e2e",
                                       fromlist=["main"]).main([]),
+        "retrieval": lambda: __import__("benchmarks.retrieval_scale",
+                                        fromlist=["main"]).main(["--smoke"]),
     }
     todo = [args.only] if args.only else list(sections)
     for name in todo:

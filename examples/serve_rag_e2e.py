@@ -39,7 +39,7 @@ from repro.metrics.text import composite_quality, rouge_l
 from repro.models import Model
 from repro.rag.pipeline import build_prompt
 from repro.retrieval.encoder import TextEncoder
-from repro.retrieval.index import FlatIndex
+from repro.retrieval.index import build_index
 from repro.serving import GenerationParams, RequestQueue, ServeEngine
 from repro.train import checkpoint
 
@@ -69,11 +69,12 @@ def ensure_model(steps: int):
 class EdgeRAGNode:
     """One edge node: private corpus shard + index + serving engine."""
 
-    def __init__(self, node_id, docs, cfg, params, tok, encoder):
+    def __init__(self, node_id, docs, cfg, params, tok, encoder,
+                 index_kind="flat"):
         self.node_id = node_id
         self.docs = docs
         self.encoder = encoder
-        self.index = FlatIndex(encoder.dim)
+        self.index = build_index(encoder.dim, index_kind)
         self.index.add(encoder.encode([d.text for d in docs]),
                        [d.text for d in docs])
         self.engine = ServeEngine(cfg, params, max_len=train_tiny.SEQ + 40,
@@ -134,6 +135,8 @@ def main():
     ap.add_argument("--slots", type=int, default=6)
     ap.add_argument("--per-slot", type=int, default=32)
     ap.add_argument("--train-steps", type=int, default=300)
+    ap.add_argument("--index", default="flat", choices=["flat", "ivf"],
+                    help="per-node retrieval backend")
     args = ap.parse_args()
     t0 = time.time()
 
@@ -143,7 +146,8 @@ def main():
     print("corpus coverage per node:\n",
           np.round(coverage_matrix(node_docs, len(DOMAINS)), 2))
     encoder = TextEncoder(seed=0)
-    nodes = [EdgeRAGNode(i, nd, cfg, params, tok, encoder)
+    nodes = [EdgeRAGNode(i, nd, cfg, params, tok, encoder,
+                         index_kind=args.index)
              for i, nd in enumerate(node_docs)]
     qas_by_domain = {d: [qa for qa in qas if qa.domain == d]
                      for d in range(len(DOMAINS))}

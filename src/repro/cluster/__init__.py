@@ -1,6 +1,10 @@
 """Live edge-cluster runtime: the hierarchical scheduler driving real
-per-node ServeEngines end-to-end (measured latency/quality, no oracles).
+per-node ServeEngines end-to-end (measured latency/quality, no oracles),
+plus sketch-routed cross-node federated retrieval.
 """
+from repro.cluster.federation import (CentroidSketch,  # noqa: F401
+                                      FederatedRetriever, FederationStats,
+                                      enable_federation)
 from repro.cluster.node import LiveEdgeNode, LiveNodeStats  # noqa: F401
 from repro.cluster.replay import (LiveWorkload, ReplayReport,  # noqa: F401
                                   replay_trace)

@@ -5,7 +5,11 @@
 It owns
 
   * a smoke-config ``ServeEngine`` (heterogeneous architecture per node),
-  * a private domain-partitioned corpus behind a ``FlatIndex``,
+  * a private domain-partitioned corpus behind a ``VectorIndex``
+    backend (exact ``flat`` scan or ``ivf`` ANN probe),
+  * optionally a ``SemanticQueryCache`` (repeat/near-duplicate queries
+    skip the index probe) and a ``FederatedRetriever`` handle
+    (sketch-routed cross-node retrieval; see ``cluster.federation``),
   * a ``RequestQueue`` per slot that packs the assigned queries into
     bucketed waves over the engine's static slots.
 
@@ -25,7 +29,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -36,8 +40,9 @@ from repro.data.corpus import Document
 from repro.data.tokenizer import EOS, Tokenizer
 from repro.metrics.text import composite_quality
 from repro.rag.pipeline import build_prompt
+from repro.retrieval.cache import SemanticQueryCache
 from repro.retrieval.encoder import TextEncoder
-from repro.retrieval.index import FlatIndex
+from repro.retrieval.index import build_index
 from repro.serving.engine import ServeEngine
 from repro.serving.sampling import GenerationParams
 from repro.serving.scheduler import RequestQueue
@@ -52,6 +57,9 @@ class LiveNodeStats:
     tokens_out: int = 0
     retrieval_s: float = 0.0
     generate_s: float = 0.0
+    cache_hits: int = 0               # retrievals served by the cache
+    remote_contexts: int = 0          # contexts fetched from other shards
+    remote_gold: int = 0              # ... that contained the gold answer
 
     @property
     def queries_per_s(self) -> float:
@@ -66,7 +74,9 @@ class LiveEdgeNode:
                  docs: Sequence[Document], tokenizer: Tokenizer,
                  encoder: TextEncoder, *, batch_size: int = 4,
                  max_len: int = 256, top_k: int = 2,
-                 max_new_tokens: int = 8, seed: int = 0):
+                 max_new_tokens: int = 8, seed: int = 0,
+                 index_kind: str = "flat", nprobe: Optional[int] = None,
+                 cache: Optional[SemanticQueryCache] = None):
         self.node_id = node_id
         self.arch = arch
         self.docs = list(docs)
@@ -77,26 +87,67 @@ class LiveEdgeNode:
                                   batch_size=batch_size)
         self.gen = GenerationParams(max_new_tokens=max_new_tokens,
                                     eos_id=EOS)
-        self.index = FlatIndex(encoder.dim)
+        index_kw = {"nprobe": nprobe} if index_kind == "ivf" else {}
+        self.index = build_index(encoder.dim, index_kind, **index_kw)
         if self.docs:
             self.index.add(encoder.encode([d.text for d in self.docs]),
                            [d.text for d in self.docs])
+        self.cache = cache
+        self.federation = None        # set by federation.enable_federation
         self.capacity: Optional[CapacityFunction] = None
         self.stats = LiveNodeStats()
         self.last_contexts: Dict[int, List[str]] = {}
+        self.last_sources: Dict[int, List[int]] = {}
         self._key = jax.random.PRNGKey(seed)
 
     # ------------------------------------------------------------ retrieval
 
-    def _retrieve(self, queries: Sequence[Query]) -> List[List[str]]:
-        """Top-k chunks from this node's OWN index (queries arrive with
-        coordinator-computed embeddings; doc and query embeddings share
-        one seeded encoder)."""
-        if not len(self.index):
-            return [[] for _ in queries]
-        embs = np.stack([q.embedding for q in queries])
-        _, idx = self.index.search(embs, min(self.top_k, len(self.index)))
-        return [[str(p) for p in self.index.payloads(row)] for row in idx]
+    def _retrieve(self, queries: Sequence[Query]
+                  ) -> Tuple[List[List[str]], List[List[int]]]:
+        """Per query: top-k chunk texts + the shard each came from.
+        Cache hits skip the probe; with a federation handle the probe
+        spans the sketch-routed remote shards, otherwise it is the
+        node's OWN index (queries arrive with coordinator-computed
+        embeddings; doc and query embeddings share one seeded encoder).
+        """
+        n = len(queries)
+        contexts: List[Optional[List[str]]] = [None] * n
+        sources: List[Optional[List[int]]] = [None] * n
+        misses = []
+        for t, q in enumerate(queries):
+            if self.cache is not None:
+                hit = self.cache.lookup(q.embedding)
+                if hit is not None:
+                    contexts[t], sources[t] = hit
+                    self.stats.cache_hits += 1
+                    continue
+            misses.append(t)
+        if misses:
+            embs = np.stack([queries[t].embedding for t in misses])
+            if self.federation is not None:
+                ctxs, srcs = self.federation.retrieve(self.node_id, embs,
+                                                      self.top_k)
+            elif len(self.index):
+                _, idx = self.index.search(embs, self.top_k)
+                ctxs = [[str(p) for p in self.index.payloads(row)]
+                        for row in idx]
+                srcs = [[self.node_id] * len(c) for c in ctxs]
+            else:
+                ctxs = [[] for _ in misses]
+                srcs = [[] for _ in misses]
+            for t, c, s in zip(misses, ctxs, srcs):
+                contexts[t], sources[t] = c, s
+                if self.cache is not None:
+                    self.cache.insert(queries[t].embedding, (c, s))
+                # remote-shard accounting only for real probes (cache
+                # hits replay stored contexts without fetching anything)
+                gold = queries[t].reference.rstrip(" .")
+                for text, src in zip(c, s):
+                    if src != self.node_id:
+                        self.stats.remote_contexts += 1
+                        if gold and gold in text:
+                            self.stats.remote_gold += 1
+        return contexts, sources
 
     # ------------------------------------------------------------ execution
 
@@ -110,7 +161,7 @@ class LiveEdgeNode:
             return []
         self.stats.slots += 1
         t0 = time.perf_counter()
-        contexts = self._retrieve(queries)
+        contexts, sources = self._retrieve(queries)
         t_retrieval = time.perf_counter() - t0
         self.stats.retrieval_s += t_retrieval
 
@@ -132,7 +183,8 @@ class LiveEdgeNode:
 
         results: List[QueryResult] = []
         self.last_contexts = {}
-        for q, rid, ctx in zip(queries, rids, contexts):
+        self.last_sources = {}
+        for q, rid, ctx, src in zip(queries, rids, contexts, sources):
             comp = queue.result(rid)
             latency = t_retrieval + wave_elapsed[comp.wave]
             answer = self.tok.decode(comp.tokens)
@@ -140,6 +192,7 @@ class LiveEdgeNode:
             quality = 0.0 if dropped else composite_quality(answer,
                                                             q.reference)
             self.last_contexts[q.qid] = ctx
+            self.last_sources[q.qid] = src
             self.stats.queries += 1
             self.stats.drops += int(dropped)
             results.append(QueryResult(q.qid, self.node_id, self.arch,

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.topk_retrieval import topk_pallas
+from repro.kernels.topk_retrieval import ivf_topk_pallas, topk_pallas
 
 
 def _default_interpret() -> bool:
@@ -48,3 +48,16 @@ def retrieval_topk(queries, docs, k: int, *, q_block: int = 128,
         return ref.topk_ref(queries, docs, k)
     return topk_pallas(queries, docs, k, q_block=q_block, d_block=d_block,
                        interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_pallas"))
+def ivf_retrieval_topk(queries, list_emb, list_ids, probe_ids, k: int, *,
+                       use_pallas: bool = True
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """IVF probe top-k: score queries [Nq,D] only against their routed
+    inverted lists (list_emb [n_lists,L,D], ids [n_lists,L] with -1
+    padding, probe_ids [Nq,nprobe]) -> ([Nq,k], [Nq,k])."""
+    if not use_pallas:
+        return ref.ivf_topk_ref(queries, list_emb, list_ids, probe_ids, k)
+    return ivf_topk_pallas(queries, list_emb, list_ids, probe_ids, k,
+                           interpret=_default_interpret())

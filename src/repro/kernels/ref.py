@@ -46,3 +46,22 @@ def topk_ref(queries: jax.Array, docs: jax.Array, k: int
     exact inner-product search."""
     scores = queries.astype(jnp.float32) @ docs.astype(jnp.float32).T
     return jax.lax.top_k(scores, k)
+
+
+def ivf_topk_ref(queries: jax.Array, list_emb: jax.Array,
+                 list_ids: jax.Array, probe_ids: jax.Array, k: int
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for the IVF probe kernel: gather each query's ``nprobe``
+    inverted lists, score the union, top-k.  Padding (id -1) scores
+    -1e30; the stable tie-break matches the kernel's carried-first
+    merge order, so indices agree exactly."""
+    q = queries.astype(jnp.float32)
+    cand_emb = list_emb[probe_ids].astype(jnp.float32)   # [Nq, P, L, D]
+    cand_ids = list_ids[probe_ids]                       # [Nq, P, L]
+    s = jnp.einsum("qd,qpld->qpl", q, cand_emb)
+    s = jnp.where(cand_ids >= 0, s, -1e30)
+    nq = q.shape[0]
+    s, ids = s.reshape(nq, -1), cand_ids.reshape(nq, -1)
+    top_s, pos = jax.lax.top_k(s, k)
+    top_i = jnp.take_along_axis(ids, pos, axis=1)
+    return top_s, jnp.where(top_s <= -1e30, -1, top_i)

@@ -11,6 +11,14 @@ keeps the running [q_block, k] best scores/indices across doc tiles.
 The merge concatenates the carried top-k with the new tile's scores and
 re-selects top-k via jax.lax.top_k (lowered to a bitonic sort on TPU —
 fine for k <= 32).
+
+``ivf_topk_pallas`` is the IVF probe variant: instead of streaming over
+every document tile, the doc axis walks only the query's ``nprobe``
+inverted lists, whose block offsets come from a scalar-prefetched
+``probe_ids`` table (``PrefetchScalarGridSpec`` — the index map reads
+the routing decision before the kernel body runs, so each grid step
+DMAs exactly one probed list into VMEM).  The running-merge scratch
+logic is shared with the exact kernel.
 """
 from __future__ import annotations
 
@@ -101,3 +109,80 @@ def topk_pallas(queries: jax.Array, docs: jax.Array, k: int, *,
             dimension_semantics=("parallel", "arbitrary")),
     )(queries, docs)
     return scores[:Nq], idx[:Nq]
+
+
+def _ivf_topk_kernel(probe_ref, q_ref, emb_ref, ids_ref, score_ref,
+                     idx_ref, best_s, best_i, *, k: int):
+    del probe_ref                     # consumed by the index maps only
+    j = pl.program_id(1)
+    nprobe = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        best_s[...] = jnp.full_like(best_s, NEG_INF)
+        best_i[...] = jnp.full_like(best_i, -1)
+
+    q = q_ref[...].astype(jnp.float32)                 # [1, D]
+    d = emb_ref[0].astype(jnp.float32)                 # [L, D]
+    ids = ids_ref[...]                                 # [1, L], -1 = pad
+    s = jax.lax.dot_general(q, d, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [1, L]
+    s = jnp.where(ids >= 0, s, NEG_INF)
+    cat_s = jnp.concatenate([best_s[...], s], axis=1)  # [1, k+L]
+    cat_i = jnp.concatenate([best_i[...], ids], axis=1)
+    top_s, pos = jax.lax.top_k(cat_s, k)
+    best_s[...] = top_s
+    best_i[...] = jnp.take_along_axis(cat_i, pos, axis=1)
+
+    @pl.when(j == nprobe - 1)
+    def _finalize():
+        score_ref[...] = best_s[...]
+        idx_ref[...] = best_i[...]
+
+
+def ivf_topk_pallas(queries: jax.Array, list_emb: jax.Array,
+                    list_ids: jax.Array, probe_ids: jax.Array, k: int, *,
+                    interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """IVF probe: score each query only against its ``nprobe`` routed
+    inverted lists, merging partial top-k across lists in VMEM scratch.
+
+    queries   [Nq, D]            query embeddings
+    list_emb  [n_lists, L, D]    lists padded to a uniform length L
+    list_ids  [n_lists, L]       global doc ids, -1 on padding
+    probe_ids [Nq, nprobe] int32 routed list per (query, probe) step
+    -> (scores [Nq, k] f32, global ids [Nq, k] i32; (NEG_INF, -1) fill
+    when a query's probed lists hold fewer than k documents).
+    """
+    Nq, D = queries.shape
+    _, L, _ = list_emb.shape
+    nprobe = probe_ids.shape[1]
+    kernel = functools.partial(_ivf_topk_kernel, k=k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Nq, nprobe),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda i, j, p: (i, 0)),
+            pl.BlockSpec((1, L, D), lambda i, j, p: (p[i, j], 0, 0)),
+            pl.BlockSpec((1, L), lambda i, j, p: (p[i, j], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i, j, p: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, j, p: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, k), jnp.float32),
+            pltpu.VMEM((1, k), jnp.int32),
+        ],
+    )
+    scores, idx = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Nq, k), jnp.float32),
+            jax.ShapeDtypeStruct((Nq, k), jnp.int32),
+        ],
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+    )(probe_ids.astype(jnp.int32), queries, list_emb, list_ids)
+    return scores, idx

@@ -11,37 +11,70 @@ latency/quality/drop metrics.
         --nodes 2 --slots 3
     ... --no-inter-node          # capacity-unaware routing ablation
     ... --trace uniform          # constant volume instead of diurnal
+    ... --index ivf --nprobe 3   # ANN retrieval instead of the flat scan
+    ... --federated --cache      # cross-node retrieval + semantic cache
+    ... --ckpt experiments/tiny_lm.npz   # trained generator weights
 """
 import argparse
+import json
+import os
 import time
 
 import jax
 import numpy as np
 
 from repro.cluster import ClusterRuntime, LiveEdgeNode, LiveWorkload, \
-    replay_trace
+    enable_federation, replay_trace
 from repro.configs import get_smoke_config
 from repro.core.identifier import OnlineQueryIdentifier
 from repro.data.corpus import DOMAINS, generate_corpus
 from repro.data.partition import coverage_matrix, partition_edge_data
 from repro.data.tokenizer import Tokenizer
 from repro.models import Model
+from repro.retrieval.cache import SemanticQueryCache
 from repro.retrieval.encoder import TextEncoder
+from repro.train import checkpoint
 
 # heterogeneous architectures, cycled across nodes
 NODE_ARCHS = ("olmo-1b", "xlstm-350m", "hymba-1.5b", "qwen2-moe-a2.7b")
+
+# examples/train_tiny.py checkpoint geometry (see its make_dataset/main)
+CKPT_D_MODEL = 256
+
+
+def _load_ckpt_params(ckpt: str, arch: str, vocab: int, max_len: int):
+    """Try restoring a ``train_tiny`` checkpoint into this arch; returns
+    (cfg, params) or None when the architecture/shape doesn't match."""
+    cfg = get_smoke_config(arch, max_d_model=CKPT_D_MODEL, vocab=vocab)
+    like = Model(cfg).init_params(jax.random.PRNGKey(0), max_seq=max_len)
+    try:
+        return cfg, checkpoint.load(ckpt, like)
+    except (KeyError, AssertionError, ValueError):
+        return None
 
 
 def build_cluster(n_nodes: int, *, smoke: bool = True, entities: int = 8,
                   archs=NODE_ARCHS, max_len: int = 192, batch: int = 4,
                   new_tokens: int = 8, top_k: int = 2, d_model: int = 32,
-                  seed: int = 0, update_threshold: int = 16):
+                  seed: int = 0, update_threshold: int = 16,
+                  index_kind: str = "flat", nprobe=None,
+                  cache: bool = False, federated: bool = False,
+                  fanout: int = 2, sketch_centroids: int = 8,
+                  ckpt=None):
     """Corpus + tokenizer + N live nodes + PPO identifier.  Returns
-    (nodes, workload-ready qas, tokenizer, encoder, identifier)."""
+    (nodes, workload-ready qas, tokenizer, encoder, identifier,
+    coverage matrix).  ``ckpt`` loads ``examples/train_tiny.py``
+    weights (and their vocab) into every node whose architecture
+    matches the checkpoint; ``federated`` attaches a shared
+    ``FederatedRetriever`` to all nodes."""
     docs, qas = generate_corpus(entities, seed=seed)
-    tok = Tokenizer.build([d.text for d in docs]
-                          + [qa.question for qa in qas]
-                          + ["context question answer <sep>"])
+    if ckpt:
+        with open(os.path.splitext(ckpt)[0] + "_vocab.json") as f:
+            tok = Tokenizer(json.load(f))
+    else:
+        tok = Tokenizer.build([d.text for d in docs]
+                              + [qa.question for qa in qas]
+                              + ["context question answer <sep>"])
     encoder = TextEncoder(seed=seed)
     n_domains = len(DOMAINS)
     primaries = [[d for d in range(n_domains) if d % n_nodes == n]
@@ -50,15 +83,30 @@ def build_cluster(n_nodes: int, *, smoke: bool = True, entities: int = 8,
     nodes = []
     for n in range(n_nodes):
         arch = archs[n % len(archs)]
-        cfg = get_smoke_config(arch, max_d_model=d_model if smoke else 128,
-                               vocab=len(tok))
-        params = Model(cfg).init_params(jax.random.PRNGKey(seed + n),
-                                        max_seq=max_len)
-        nodes.append(LiveEdgeNode(n, arch, cfg, params, node_docs[n], tok,
-                                  encoder, batch_size=batch,
-                                  max_len=max_len, top_k=top_k,
-                                  max_new_tokens=new_tokens,
-                                  seed=seed + 10 * n))
+        loaded = _load_ckpt_params(ckpt, arch, len(tok), max_len) \
+            if ckpt else None
+        if loaded is not None:
+            cfg, params = loaded
+            print(f"node {n} [{arch}]: loaded trained weights from {ckpt}",
+                  flush=True)
+        else:
+            if ckpt:
+                print(f"node {n} [{arch}]: ckpt arch/shape mismatch — "
+                      f"random init", flush=True)
+            cfg = get_smoke_config(arch,
+                                   max_d_model=d_model if smoke else 128,
+                                   vocab=len(tok))
+            params = Model(cfg).init_params(jax.random.PRNGKey(seed + n),
+                                            max_seq=max_len)
+        nodes.append(LiveEdgeNode(
+            n, arch, cfg, params, node_docs[n], tok, encoder,
+            batch_size=batch, max_len=max_len, top_k=top_k,
+            max_new_tokens=new_tokens, seed=seed + 10 * n,
+            index_kind=index_kind, nprobe=nprobe,
+            cache=SemanticQueryCache() if cache else None))
+    if federated:
+        enable_federation(nodes, fanout=fanout,
+                          n_centroids=sketch_centroids, seed=seed)
     ident = OnlineQueryIdentifier(encoder.dim, n_nodes, seed=seed,
                                   update_threshold=update_threshold)
     cov = coverage_matrix(node_docs, n_domains)
@@ -89,6 +137,19 @@ def main():
     ap.add_argument("--max-len", type=int, default=192)
     ap.add_argument("--top-k", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--index", default="flat", choices=["flat", "ivf"],
+                    help="per-node retrieval backend (ivf = ANN probe)")
+    ap.add_argument("--nprobe", type=int, default=None,
+                    help="IVF lists probed per query (default ~20%%)")
+    ap.add_argument("--federated", action="store_true",
+                    help="sketch-routed cross-node retrieval")
+    ap.add_argument("--fanout", type=int, default=2,
+                    help="shards probed per query when --federated")
+    ap.add_argument("--cache", action="store_true",
+                    help="per-node semantic query cache")
+    ap.add_argument("--ckpt", default=None,
+                    help="examples/train_tiny.py checkpoint (.npz); "
+                         "loads into matching-arch nodes")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -100,8 +161,15 @@ def main():
         args.nodes, smoke=args.smoke, entities=entities, batch=args.batch,
         max_len=args.max_len, new_tokens=args.new_tokens,
         top_k=args.top_k, seed=args.seed,
-        update_threshold=max(4, args.per_slot))
+        update_threshold=max(4, args.per_slot),
+        index_kind=args.index, nprobe=args.nprobe, cache=args.cache,
+        federated=args.federated, fanout=args.fanout, ckpt=args.ckpt)
     print("corpus coverage per node:\n", np.round(cov, 2), flush=True)
+    if args.federated:
+        fed = nodes[0].federation
+        print(f"federation: {len(fed.sketches)} shard sketches published "
+              f"({fed.n_centroids} centroids each), fanout {fed.fanout}",
+              flush=True)
 
     runtime = ClusterRuntime(nodes, ident,
                              use_inter_node=not args.no_inter_node,
@@ -133,9 +201,21 @@ def main():
           f"ppo_updates={s['ppo_updates']}")
     for node in nodes:
         st = node.stats
+        extra = ""
+        if args.cache:
+            extra += f", {st.cache_hits} cache hits"
+        if args.federated:
+            extra += (f", {st.remote_contexts} remote ctx "
+                      f"({st.remote_gold} gold)")
         print(f"  node {node.node_id} [{node.arch}]: {st.queries} queries "
               f"in {st.waves} waves, {st.tokens_out} tokens, "
-              f"{st.drops} drops, {st.queries_per_s:.1f} q/s measured")
+              f"{st.drops} drops, {st.queries_per_s:.1f} q/s measured"
+              + extra)
+    if args.federated:
+        fs = nodes[0].federation.stats
+        print(f"federation: {fs.shard_probes} shard probes "
+              f"({fs.remote_probes} remote) for {fs.queries} queries, "
+              f"{fs.remote_contexts} remote contexts merged")
     print(f"total {time.time() - t0:.0f}s")
 
 

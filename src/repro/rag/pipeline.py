@@ -5,8 +5,9 @@ Prompt format (word-tokenizer friendly):
 The generator runs through the request-level ``RequestQueue`` scheduler
 (bucket-packed waves over the ServeEngine's static slots) instead of
 fixed-size chunking; quality is scored with repro.metrics against the
-reference answer.  Retrieval scores (inner products from the flat
-index) are propagated into each ``RAGResult``.
+reference answer.  Retrieval goes through any ``VectorIndex`` backend
+(exact flat scan or IVF ANN probe) with an optional semantic query
+cache in front; index scores are propagated into each ``RAGResult``.
 """
 from __future__ import annotations
 
@@ -16,8 +17,9 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.data.tokenizer import EOS, SEP, Tokenizer
+from repro.retrieval.cache import SemanticQueryCache
 from repro.retrieval.encoder import TextEncoder
-from repro.retrieval.index import FlatIndex
+from repro.retrieval.index import VectorIndex
 from repro.serving.engine import ServeEngine
 from repro.serving.sampling import GenerationParams
 from repro.serving.scheduler import RequestQueue
@@ -37,22 +39,41 @@ def build_prompt(question: str, contexts: Sequence[str]) -> str:
 
 
 class RAGPipeline:
-    def __init__(self, encoder: TextEncoder, index: FlatIndex,
+    def __init__(self, encoder: TextEncoder, index: VectorIndex,
                  engine: ServeEngine, tokenizer: Tokenizer,
-                 *, top_k: int = 5, max_new_tokens: int = 24):
+                 *, top_k: int = 5, max_new_tokens: int = 24,
+                 cache: Optional[SemanticQueryCache] = None):
         self.encoder = encoder
         self.index = index
         self.engine = engine
         self.tok = tokenizer
         self.top_k = top_k
         self.max_new_tokens = max_new_tokens
+        self.cache = cache
 
     def retrieve(self, questions: Sequence[str]
                  ) -> Tuple[List[List[str]], np.ndarray]:
-        """Returns (contexts per question, index scores [Nq, top_k])."""
+        """Returns (contexts per question, index scores [Nq, top_k]);
+        near-duplicate questions are served from the semantic cache
+        without touching the index."""
         q_emb = self.encoder.encode(list(questions))
-        scores, idx = self.index.search(q_emb, self.top_k)
-        contexts = [[str(p) for p in self.index.payloads(row)] for row in idx]
+        contexts: List[Optional[List[str]]] = [None] * len(questions)
+        scores = np.full((len(questions), self.top_k), -1e30, np.float32)
+        misses = []
+        for t, emb in enumerate(q_emb):
+            hit = self.cache.lookup(emb) if self.cache is not None else None
+            if hit is not None:
+                contexts[t], scores[t, :len(hit[1])] = hit[0], hit[1]
+            else:
+                misses.append(t)
+        if misses:
+            s, idx = self.index.search(q_emb[misses], self.top_k)
+            for row, t in enumerate(misses):
+                contexts[t] = [str(p) for p in
+                               self.index.payloads(idx[row])]
+                scores[t, :s.shape[1]] = s[row]
+                if self.cache is not None:
+                    self.cache.insert(q_emb[t], (contexts[t], s[row]))
         return contexts, scores
 
     def answer(self, questions: Sequence[str]) -> List[RAGResult]:

@@ -1,16 +1,50 @@
-"""Exact flat vector index (the paper's Faiss flat index, JAX-native).
+"""Vector-index protocol + the exact flat index.
 
-Search runs through the Pallas streaming top-k kernel on TPU (or its
-jnp reference on CPU); ``repro.distributed.collectives.distributed_topk``
-provides the corpus-sharded multi-node variant.
+``VectorIndex`` is the structural interface every retrieval backend
+satisfies (``FlatIndex`` here, ``ivf.IVFIndex`` for the ANN path); all
+construction sites go through ``build_index`` instead of hard-coding a
+backend.  ``sketch`` publishes a k-means centroid summary of the shard
+— the only thing a node shares for privacy-preserving federated routing
+(see ``repro.cluster.federation``): centroids + counts, never documents.
+
+``FlatIndex.search`` runs through the Pallas streaming top-k kernel on
+TPU (or its jnp reference on CPU); ``distributed.collectives
+.distributed_topk`` provides the corpus-sharded multi-node variant.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from typing import (List, Optional, Protocol, Sequence, Tuple,
+                    runtime_checkable)
 
 import numpy as np
 
 from repro.kernels import ops, ref
+
+
+@runtime_checkable
+class VectorIndex(Protocol):
+    """What retrieval consumers (RAG pipeline, live nodes, federation)
+    need from an index backend."""
+
+    dim: int
+
+    def __len__(self) -> int:
+        ...
+
+    def add(self, embeddings: np.ndarray,
+            payloads: Sequence[object]) -> None:
+        ...
+
+    def search(self, queries: np.ndarray, k: int
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        ...
+
+    def payloads(self, idx: Sequence[int]) -> List[object]:
+        ...
+
+    def sketch(self, n_centroids: int = 8, *, seed: int = 0
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        ...
 
 
 class FlatIndex:
@@ -32,7 +66,7 @@ class FlatIndex:
 
     def search(self, queries: np.ndarray, k: int
                ) -> Tuple[np.ndarray, np.ndarray]:
-        """[Nq, dim] -> (scores [Nq,k'], indices [Nq,k']) with
+        """[Nq, dim] -> (scores [Nq,k'], indices [Nq,k'] int32) with
         k' = min(k, index size); an empty index (or k <= 0) yields
         [Nq, 0] results instead of failing."""
         queries = np.asarray(queries, np.float32)
@@ -40,12 +74,36 @@ class FlatIndex:
         if self._emb is None or k <= 0:
             nq = queries.shape[0]
             return (np.zeros((nq, 0), np.float32),
-                    np.zeros((nq, 0), np.int64))
+                    np.zeros((nq, 0), np.int32))
         import jax.numpy as jnp
         s, i = ops.retrieval_topk(jnp.asarray(queries),
                                   jnp.asarray(self._emb), k,
                                   use_pallas=self.use_pallas)
-        return np.asarray(s), np.asarray(i)
+        return np.asarray(s), np.asarray(i, np.int32)
 
     def payloads(self, idx: Sequence[int]) -> List[object]:
-        return [self._payloads[int(i)] for i in idx]
+        """Negative ids are top-k fill slots (query had fewer than k
+        candidates) and are skipped."""
+        return [self._payloads[int(i)] for i in idx if int(i) >= 0]
+
+    def sketch(self, n_centroids: int = 8, *, seed: int = 0
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """(centroids [m, dim], per-centroid doc counts [m]) — a
+        shareable summary of the shard that reveals no documents."""
+        if self._emb is None:
+            return np.zeros((0, self.dim), np.float32), np.zeros(0)
+        from repro.retrieval.ivf import kmeans
+        cents, assign = kmeans(self._emb, n_centroids, seed=seed)
+        return cents, np.bincount(assign, minlength=len(cents)).astype(
+            np.float64)
+
+
+def build_index(dim: int, kind: str = "flat", **kw) -> VectorIndex:
+    """Index factory: ``flat`` (exact) or ``ivf`` (ANN, k-means coarse
+    quantizer + probed-list top-k).  Extra kwargs go to the backend."""
+    if kind == "flat":
+        return FlatIndex(dim, **kw)
+    if kind == "ivf":
+        from repro.retrieval.ivf import IVFIndex
+        return IVFIndex(dim, **kw)
+    raise ValueError(f"unknown index kind {kind!r} (flat|ivf)")

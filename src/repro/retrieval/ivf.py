@@ -1,0 +1,211 @@
+"""IVF ANN index: JAX k-means coarse quantizer + probed-list top-k.
+
+The scalable counterpart of ``FlatIndex`` (same ``VectorIndex``
+protocol): documents are bucketed into ``n_lists`` inverted lists by a
+k-means coarse quantizer trained on the shard's own embeddings; a query
+scores only the ``nprobe`` lists whose centroids it is closest to —
+O(n_lists·d + nprobe·L·d) instead of the flat scan's O(N·d).  The probe
+runs through ``kernels.topk_retrieval.ivf_topk_pallas`` (scalar-
+prefetched list DMA + the same streaming top-k merge as the exact
+kernel) on TPU, or its jnp reference on CPU.
+
+``last_scored_frac`` reports the fraction of the corpus actually scored
+by the most recent ``search`` — the knob the ANN/recall trade lives on
+(see ``benchmarks/retrieval_scale.py``).
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.kernels import ops
+
+
+def kmeans(x: np.ndarray, n_clusters: int, *, iters: int = 10,
+           seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Lloyd's k-means under inner-product similarity (inputs are
+    unit-norm, so this is spherical k-means): jitted scan of assign ->
+    mean -> renormalize steps.  Returns (centroids [C, d] f32,
+    assignment [N] int).  Empty clusters keep their previous centroid.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    x = np.asarray(x, np.float32)
+    n, _ = x.shape
+    n_clusters = max(1, min(n_clusters, n))
+    rng = np.random.default_rng(seed)
+    init = x[rng.choice(n, size=n_clusters, replace=False)]
+    xs = jnp.asarray(x)
+
+    def step(cents, _):
+        assign = jnp.argmax(xs @ cents.T, axis=1)
+        onehot = jax.nn.one_hot(assign, n_clusters, dtype=jnp.float32)
+        sums = onehot.T @ xs
+        counts = onehot.sum(0)[:, None]
+        new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), cents)
+        norm = jnp.linalg.norm(new, axis=1, keepdims=True)
+        return new / jnp.maximum(norm, 1e-9), None
+
+    cents, _ = jax.lax.scan(step, jnp.asarray(init), None, length=iters)
+    assign = np.asarray(jnp.argmax(xs @ cents.T, axis=1))
+    return np.asarray(cents), assign
+
+
+class IVFIndex:
+    """Inverted-file index over unit-norm embeddings.
+
+    ``n_lists`` defaults to ~sqrt(N) (re-derived whenever the corpus
+    grows); ``nprobe`` defaults to ~20% of the lists, which lands the
+    scored fraction well under 30% of documents while the domain-
+    clustered corpora stay above 0.9 recall vs. the flat scan.  The
+    quantizer retrains lazily on the first search after an ``add``.
+    """
+
+    def __init__(self, dim: int, *, n_lists: Optional[int] = None,
+                 nprobe: Optional[int] = None, use_pallas: bool = False,
+                 train_iters: int = 10, seed: int = 0):
+        self.dim = dim
+        self.use_pallas = use_pallas
+        self.train_iters = train_iters
+        self.seed = seed
+        self._n_lists_arg = n_lists
+        self._nprobe_arg = nprobe
+        self._emb: Optional[np.ndarray] = None
+        self._payloads: List[object] = []
+        self._dirty = True
+        self._centroids: Optional[np.ndarray] = None
+        self._list_emb: Optional[np.ndarray] = None    # [n_lists, L, d]
+        self._list_ids: Optional[np.ndarray] = None    # [n_lists, L], -1 pad
+        self._list_sizes: Optional[np.ndarray] = None  # [n_lists]
+        self.last_scored_frac = 0.0
+
+    def __len__(self) -> int:
+        return len(self._payloads)
+
+    @property
+    def n_lists(self) -> int:
+        if self._n_lists_arg:
+            return max(1, min(self._n_lists_arg, len(self) or 1))
+        return max(1, min(int(math.sqrt(len(self) or 1)), 256))
+
+    @property
+    def nprobe(self) -> int:
+        if self._nprobe_arg:
+            return max(1, min(self._nprobe_arg, self.n_lists))
+        return max(1, round(0.2 * self.n_lists))
+
+    def add(self, embeddings: np.ndarray, payloads: Sequence[object]) -> None:
+        embeddings = np.asarray(embeddings, np.float32)
+        assert embeddings.shape[1] == self.dim
+        self._emb = embeddings if self._emb is None else \
+            np.concatenate([self._emb, embeddings])
+        self._payloads += list(payloads)
+        self._dirty = True
+
+    # ------------------------------------------------------------- training
+
+    def train(self) -> None:
+        """(Re)fit the coarse quantizer and pack the inverted lists into
+        uniform [n_lists, L] arrays (id -1 padding) for the kernel."""
+        assert self._emb is not None
+        n = len(self._emb)
+        cents, assign = kmeans(self._emb, self.n_lists,
+                               iters=self.train_iters, seed=self.seed)
+        n_lists = len(cents)
+        members = [np.where(assign == l)[0] for l in range(n_lists)]
+        L = max(1, max(len(m) for m in members))
+        list_emb = np.zeros((n_lists, L, self.dim), np.float32)
+        list_ids = np.full((n_lists, L), -1, np.int32)
+        for l, m in enumerate(members):
+            list_emb[l, :len(m)] = self._emb[m]
+            list_ids[l, :len(m)] = m
+        self._centroids = cents
+        self._list_emb, self._list_ids = list_emb, list_ids
+        self._list_sizes = np.array([len(m) for m in members])
+        self._dirty = False
+        assert self._list_sizes.sum() == n
+
+    # -------------------------------------------------------------- search
+
+    def search(self, queries: np.ndarray, k: int
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """[Nq, dim] -> (scores [Nq,k'], global ids [Nq,k'] int32) with
+        k' = min(k, index size).  Rows whose probed lists hold fewer
+        than k' documents are filled with (-1e30, -1) — ``payloads``
+        skips the -1 slots.  Empty index / k <= 0 -> [Nq, 0]."""
+        queries = np.asarray(queries, np.float32)
+        k = min(k, len(self))
+        if self._emb is None or k <= 0:
+            nq = queries.shape[0]
+            return (np.zeros((nq, 0), np.float32),
+                    np.zeros((nq, 0), np.int32))
+        if self._dirty:
+            self.train()
+        n_lists, L = self._list_ids.shape
+        # coarse routing: top-nprobe centroid lists per query (enough
+        # probed slots to hold k results even under heavy imbalance)
+        nprobe = min(max(self.nprobe, math.ceil(k / L)), n_lists)
+        cs = queries @ self._centroids.T                 # [Nq, n_lists]
+        probe = np.argsort(-cs, axis=1)[:, :nprobe].astype(np.int32)
+        self.last_scored_frac = float(
+            self._list_sizes[probe].sum(axis=1).mean() / len(self))
+        if not self.use_pallas:
+            return self._probe_numpy(queries, probe, k)
+        import jax.numpy as jnp
+        s, i = ops.ivf_retrieval_topk(
+            jnp.asarray(queries), jnp.asarray(self._list_emb),
+            jnp.asarray(self._list_ids), jnp.asarray(probe), k,
+            use_pallas=True)
+        return np.asarray(s), np.asarray(i, np.int32)
+
+    def _probe_numpy(self, queries: np.ndarray, probe: np.ndarray,
+                     k: int) -> Tuple[np.ndarray, np.ndarray]:
+        """CPU probe: group queries by probed list so each list is
+        scored once with a single matmul (the per-query gather the jnp
+        oracle does would replicate every list per query)."""
+        nq = len(queries)
+        cand_s: List[List[np.ndarray]] = [[] for _ in range(nq)]
+        cand_i: List[List[np.ndarray]] = [[] for _ in range(nq)]
+        for l in np.unique(probe):
+            size = int(self._list_sizes[l])
+            if size == 0:
+                continue
+            rows = np.unique(np.where(probe == l)[0])
+            s = queries[rows] @ self._list_emb[l, :size].T
+            ids = self._list_ids[l, :size]
+            for r, qi in enumerate(rows):
+                cand_s[qi].append(s[r])
+                cand_i[qi].append(ids)
+        out_s = np.full((nq, k), -1e30, np.float32)
+        out_i = np.full((nq, k), -1, np.int32)
+        for qi in range(nq):
+            if not cand_s[qi]:
+                continue
+            s = np.concatenate(cand_s[qi])
+            ids = np.concatenate(cand_i[qi])
+            m = min(k, len(s))
+            top = np.argpartition(-s, m - 1)[:m]
+            top = top[np.argsort(-s[top], kind="stable")]
+            out_s[qi, :m] = s[top]
+            out_i[qi, :m] = ids[top]
+        return out_s, out_i
+
+    def payloads(self, idx: Sequence[int]) -> List[object]:
+        return [self._payloads[int(i)] for i in idx if int(i) >= 0]
+
+    def sketch(self, n_centroids: int = 8, *, seed: int = 0
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Reuses the trained coarse quantizer when it is at least as
+        coarse as requested; otherwise refits a smaller k-means."""
+        if self._emb is None:
+            return np.zeros((0, self.dim), np.float32), np.zeros(0)
+        if self._dirty:
+            self.train()
+        if len(self._centroids) <= n_centroids:
+            return self._centroids, self._list_sizes.astype(np.float64)
+        cents, assign = kmeans(self._emb, n_centroids, seed=seed)
+        return cents, np.bincount(assign, minlength=len(cents)).astype(
+            np.float64)

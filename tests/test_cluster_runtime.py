@@ -113,6 +113,31 @@ def test_replay_rejects_unknown_trace(cluster):
                      trace="square-wave")
 
 
+def test_ckpt_loader_restores_matching_arch_only(tmp_path):
+    """--ckpt restores train_tiny weights into same-arch nodes and
+    falls back (returns None) on architecture/shape mismatch."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.launch.cluster_serve import CKPT_D_MODEL, _load_ckpt_params
+    from repro.models import Model
+    from repro.train import checkpoint
+
+    vocab = 32
+    cfg = get_smoke_config("olmo-1b", max_d_model=CKPT_D_MODEL,
+                           vocab=vocab)
+    params = Model(cfg).init_params(jax.random.PRNGKey(0), max_seq=64)
+    path = str(tmp_path / "tiny.npz")
+    checkpoint.save(path, params)
+    loaded = _load_ckpt_params(path, "olmo-1b", vocab, 64)
+    assert loaded is not None
+    lcfg, lparams = loaded
+    assert lcfg.name == cfg.name
+    flat = jax.tree_util.tree_leaves(lparams)
+    assert all(hasattr(l, "shape") for l in flat)
+    assert _load_ckpt_params(path, "xlstm-350m", vocab, 64) is None
+    assert _load_ckpt_params(path, "olmo-1b", vocab + 1, 64) is None
+
+
 def test_live_and_simulated_nodes_share_protocol(cluster):
     from repro.core.cluster import make_paper_testbed
     nodes, _, _, encoder = cluster

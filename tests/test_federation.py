@@ -1,0 +1,157 @@
+"""Cross-node federated retrieval: sketch routing over lightweight
+shards, partial top-k merge with cross-shard dedup, and the live-node
+integration (a query processed on a node WITHOUT its gold document gets
+the gold context from a remote shard — impossible node-locally — plus
+semantic-cache reuse across slots)."""
+import numpy as np
+import pytest
+
+from repro.cluster.federation import (CentroidSketch, FederatedRetriever,
+                                      ShardHost, enable_federation)
+from repro.core.cluster import Query
+from repro.data.corpus import generate_corpus
+from repro.retrieval.encoder import TextEncoder
+from repro.retrieval.index import FlatIndex
+
+SLO = 120.0
+
+
+class _Shard:
+    def __init__(self, node_id, texts, enc):
+        self.node_id = node_id
+        self.index = FlatIndex(enc.dim)
+        if texts:
+            self.index.add(enc.encode(texts), texts)
+
+
+@pytest.fixture(scope="module")
+def shard_world():
+    """Domain-split corpus over 3 bare shards (no engines)."""
+    docs, qas = generate_corpus(10, seed=0)
+    enc = TextEncoder(seed=0)
+    shards = [_Shard(n, [d.text for d in docs if d.domain % 3 == n], enc)
+              for n in range(3)]
+    return docs, qas, enc, shards
+
+
+def test_sketch_routing_finds_owning_shard(shard_world):
+    docs, qas, enc, shards = shard_world
+    fed = FederatedRetriever(shards, fanout=2, n_centroids=6, seed=0)
+    assert isinstance(shards[0], ShardHost)
+    assert all(isinstance(s, CentroidSketch) for s in
+               fed.sketches.values())
+    # a domain-4 question (shard 1) issued from origin shard 0 must
+    # route its remote probe to shard 1, the domain's owner
+    qa = next(q for q in qas if q.domain == 4)
+    emb = enc.encode([qa.question])
+    probe_sets = fed.route(0, emb)
+    assert probe_sets[0][0] == 0                     # origin always probed
+    assert 1 in probe_sets[0]
+
+
+def test_federated_retrieve_merges_remote_gold(shard_world):
+    docs, qas, enc, shards = shard_world
+    fed = FederatedRetriever(shards, fanout=2, n_centroids=6, seed=0)
+    hits = 0
+    for qa in [q for q in qas if q.domain % 3 == 2][:10]:
+        ctxs, srcs = fed.retrieve(0, enc.encode([qa.question]), 3)
+        assert len(ctxs[0]) == len(srcs[0]) <= 3
+        gold = qa.answer.rstrip(" .")
+        hits += any(s == 2 and gold in c
+                    for c, s in zip(ctxs[0], srcs[0]))
+    assert hits >= 8          # gold context arrives from the remote shard
+    assert fed.stats.remote_probes > 0
+    assert fed.stats.remote_contexts > 0
+
+
+def test_merge_is_score_ordered_and_deduped(shard_world):
+    docs, qas, enc, shards = shard_world
+    # replicate shard 2's corpus onto shard 0 (overlap partition): the
+    # merged result must not contain a text twice
+    dup = _Shard(0, [d.text for d in docs if d.domain % 3 in (0, 2)], enc)
+    fed = FederatedRetriever([dup, shards[1], shards[2]], fanout=3,
+                             n_centroids=6, seed=0)
+    qa = next(q for q in qas if q.domain % 3 == 2)
+    ctxs, srcs = fed.retrieve(0, enc.encode([qa.question]), 5)
+    assert len(ctxs[0]) == len(set(ctxs[0]))         # deduped
+    # origin copy wins the tie for a replicated doc
+    assert all(s == 0 for c, s in zip(ctxs[0], srcs[0])
+               if c in {d.text for d in docs if d.domain % 3 == 2})
+
+
+def test_fanout_one_is_local_only(shard_world):
+    docs, qas, enc, shards = shard_world
+    fed = FederatedRetriever(shards, fanout=1, n_centroids=4, seed=0)
+    ctxs, srcs = fed.retrieve(1, enc.encode([qas[0].question]), 3)
+    assert all(s == 1 for s in srcs[0])
+    assert fed.stats.remote_probes == 0
+
+
+# ------------------------------------------------------- live integration
+
+@pytest.fixture(scope="module")
+def fed_cluster():
+    """Two tiny live nodes with federation + per-node semantic cache."""
+    from repro.launch.cluster_serve import build_cluster
+    nodes, qas, tok, encoder, _, _ = build_cluster(
+        2, smoke=True, entities=3, batch=2, max_len=192, new_tokens=4,
+        top_k=2, seed=0, federated=True, fanout=2, cache=True)
+    return nodes, qas, tok, encoder
+
+
+def _remote_qa(origin, other, qas):
+    """A QA pair whose gold doc lives ONLY on the other node's shard."""
+    own = {d.doc_id for d in origin.docs}
+    remote = {d.doc_id for d in other.docs}
+    return next(q for q in qas
+                if q.doc_id in remote and q.doc_id not in own)
+
+
+def test_live_node_answers_with_remote_gold_context(fed_cluster):
+    nodes, qas, tok, encoder = fed_cluster
+    origin, other = nodes
+    assert origin.federation is other.federation is not None
+    qa = _remote_qa(origin, other, qas)
+    emb = encoder.encode([qa.question])[0]
+    res = origin.process_slot(
+        [Query(qa.domain, emb, qid=11, question=qa.question,
+               reference=qa.answer)], SLO)
+    assert len(res) == 1 and not res[0].dropped
+    ctx = origin.last_contexts[11]
+    src = origin.last_sources[11]
+    gold_text = next(d.text for d in other.docs if d.doc_id == qa.doc_id)
+    # the gold context came from the REMOTE shard — impossible with
+    # node-local retrieval, since origin does not hold the document
+    assert any(c == gold_text and s == other.node_id
+               for c, s in zip(ctx, src))
+    assert origin.stats.remote_gold >= 1
+    assert origin.stats.remote_contexts >= 1
+
+
+def test_live_node_cache_skips_repeat_probes(fed_cluster):
+    nodes, qas, tok, encoder = fed_cluster
+    node = nodes[1]
+    qa = qas[0]
+    emb = encoder.encode([qa.question])[0]
+    mk = lambda qid: Query(qa.domain, emb, qid=qid, question=qa.question,
+                           reference=qa.answer)
+    node.process_slot([mk(21)], SLO)
+    ctx_first = node.last_contexts[21]
+    probes_before = node.federation.stats.shard_probes
+    hits_before = node.stats.cache_hits
+    node.process_slot([mk(22)], SLO)                 # identical embedding
+    assert node.stats.cache_hits == hits_before + 1
+    assert node.federation.stats.shard_probes == probes_before
+    assert node.last_contexts[22] == ctx_first
+
+
+def test_enable_federation_attaches_handle(shard_world):
+    docs, qas, enc, shards = shard_world
+
+    class _Node(_Shard):
+        federation = None
+
+    ns = [_Node(n, [d.text for d in docs if d.domain % 3 == n], enc)
+          for n in range(3)]
+    fed = enable_federation(ns, fanout=2)
+    assert all(n.federation is fed for n in ns)

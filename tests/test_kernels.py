@@ -46,6 +46,84 @@ def test_topk_vs_ref(nq, nd, d, k, key):
     assert bool((i == i2).all())
 
 
+@pytest.mark.parametrize("nq,nd,d,k,qb,db", [
+    (5, 37, 16, 4, 16, 64),      # doc count far off the block multiple
+    (7, 130, 24, 3, 4, 32),      # both axes ragged, odd feature dim
+    (3, 65, 8, 5, 8, 64),        # one doc past a block boundary
+    (1, 9, 128, 2, 16, 8),       # single query, docs < one block
+])
+def test_topk_nonmultiple_shapes_vs_ref(nq, nd, d, k, qb, db, key):
+    """Interpret-mode parity on shapes that force padding on both the
+    query and doc axes (the kernel masks pad docs with NEG_INF)."""
+    ks = jax.random.split(key, 2)
+    q = jax.random.normal(ks[0], (nq, d), jnp.float32)
+    docs = jax.random.normal(ks[1], (nd, d), jnp.float32)
+    s, i = ops.retrieval_topk(q, docs, k, q_block=qb, d_block=db)
+    s2, i2 = ref.topk_ref(q, docs, k)
+    assert s.shape == (nq, k) and i.dtype == jnp.int32
+    assert float(jnp.abs(s - s2).max()) < 1e-4
+    assert bool((i == i2).all())
+
+
+def test_topk_k_exceeds_corpus(key):
+    """k > Nd: real entries first, then (NEG_INF, -1) fill — the fill
+    index is the carried sentinel, never a padded doc id."""
+    ks = jax.random.split(key, 2)
+    nd, k = 3, 5
+    q = jax.random.normal(ks[0], (4, 8), jnp.float32)
+    docs = jax.random.normal(ks[1], (nd, 8), jnp.float32)
+    s, i = ops.retrieval_topk(q, docs, k)
+    s2, i2 = ref.topk_ref(q, docs, nd)        # full exact ordering
+    assert bool((i[:, :nd] == i2).all())
+    assert float(jnp.abs(s[:, :nd] - s2).max()) < 1e-4
+    assert bool((i[:, nd:] == -1).all())
+    assert bool((s[:, nd:] <= -1e29).all())
+
+
+def test_topk_tied_scores_stable(key):
+    """Duplicated documents: exact ties must resolve to the smallest
+    doc id, matching lax.top_k's stable tie-break in the reference."""
+    base = jax.random.normal(key, (6, 16), jnp.float32)
+    docs = jnp.concatenate([base, base, base])       # ids i, i+6, i+12 tie
+    q = base[:4] * 2.0
+    s, i = ops.retrieval_topk(q, docs, 4, q_block=4, d_block=8)
+    s2, i2 = ref.topk_ref(q, docs, 4)
+    assert bool((i == i2).all())
+    # each query's own duplicate triple leads, lowest copy first
+    assert bool((i[:, 0] == jnp.arange(4)).all())
+    assert float(jnp.abs(s[:, 0] - s[:, 1]).max()) < 1e-5   # real ties
+    assert bool((i[:, 1] == jnp.arange(4) + 6).all())
+
+
+@pytest.mark.parametrize("n_lists,L,nq,nprobe,k", [
+    (6, 7, 5, 3, 4),             # ragged lists, padded tails
+    (4, 12, 3, 4, 6),            # probe every list
+    (8, 5, 2, 2, 9),             # k > probed capacity -> -1 fill
+])
+def test_ivf_topk_pallas_vs_ref(n_lists, L, nq, nprobe, k, key):
+    """The scalar-prefetch IVF probe kernel == the gather oracle,
+    including -1 padding inside lists and short candidate sets."""
+    import numpy as np
+    rng = np.random.default_rng(3)
+    emb = rng.standard_normal((n_lists, L, 16)).astype(np.float32)
+    ids = np.arange(n_lists * L, dtype=np.int32).reshape(n_lists, L)
+    for l in range(0, n_lists, 2):                   # ragged tails
+        cut = 1 + l % max(L - 1, 1)
+        ids[l, cut:] = -1
+    probe = np.stack([rng.choice(n_lists, nprobe, replace=False)
+                      for _ in range(nq)]).astype(np.int32)
+    q = rng.standard_normal((nq, 16)).astype(np.float32)
+    s, i = ops.ivf_retrieval_topk(
+        jnp.asarray(q), jnp.asarray(emb), jnp.asarray(ids),
+        jnp.asarray(probe), k, use_pallas=True)
+    s2, i2 = ops.ivf_retrieval_topk(
+        jnp.asarray(q), jnp.asarray(emb), jnp.asarray(ids),
+        jnp.asarray(probe), k, use_pallas=False)
+    assert float(jnp.abs(s - s2).max()) < 1e-4
+    assert bool((i == i2).all())
+    assert bool(((i >= -1) & (i < n_lists * L)).all())
+
+
 def test_jnp_flash_matches_kernel_math(key):
     """The model-internal blocked-jnp flash == the Pallas kernel."""
     from repro.models.layers import flash_attention as jnp_flash

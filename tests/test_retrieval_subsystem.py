@@ -1,0 +1,211 @@
+"""Retrieval subsystem: the VectorIndex protocol (flat + IVF), the
+k-means coarse quantizer, ANN recall/cost acceptance vs the flat scan,
+the semantic query cache, and sketch-based federated retrieval over
+lightweight shards (the live-cluster integration is in
+test_federation.py)."""
+import numpy as np
+import pytest
+
+from repro.data.corpus import generate_corpus
+from repro.retrieval.cache import SemanticQueryCache
+from repro.retrieval.encoder import TextEncoder
+from repro.retrieval.index import FlatIndex, VectorIndex, build_index
+from repro.retrieval.ivf import IVFIndex, kmeans
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    docs, qas = generate_corpus(40, seed=1)          # 240 docs, 6 domains
+    enc = TextEncoder(seed=0)
+    emb = enc.encode([d.text for d in docs])
+    return docs, qas, enc, emb
+
+
+# --------------------------------------------------------------- protocol
+
+def test_protocol_and_factory():
+    flat = build_index(16, "flat")
+    ivf = build_index(16, "ivf", nprobe=2)
+    assert isinstance(flat, FlatIndex) and isinstance(ivf, IVFIndex)
+    assert isinstance(flat, VectorIndex) and isinstance(ivf, VectorIndex)
+    with pytest.raises(ValueError):
+        build_index(16, "faiss")
+
+
+def test_flat_index_int32_dtype_regression():
+    """Empty-index and kernel branches must agree on int32 indices (the
+    empty branch used to return int64)."""
+    idx = FlatIndex(8)
+    _, i_empty = idx.search(np.zeros((2, 8), np.float32), 3)
+    assert i_empty.dtype == np.int32
+    idx.add(np.eye(3, 8, dtype=np.float32), ["a", "b", "c"])
+    _, i_full = idx.search(np.ones((2, 8), np.float32), 2)
+    assert i_full.dtype == np.int32 == i_empty.dtype
+
+
+# ---------------------------------------------------------------- k-means
+
+def test_kmeans_clusters_separable_data():
+    rng = np.random.default_rng(0)
+    centers = np.eye(4, 32, dtype=np.float32)
+    assign_true = rng.integers(4, size=200)
+    x = centers[assign_true] + 0.05 * rng.standard_normal((200, 32))
+    x = (x / np.linalg.norm(x, axis=1, keepdims=True)).astype(np.float32)
+    cents, assign = kmeans(x, 4, seed=0)
+    assert cents.shape == (4, 32) and len(assign) == 200
+    # same-true-cluster points land in the same learned cluster
+    for t in range(4):
+        labels = assign[assign_true == t]
+        assert len(np.unique(labels)) == 1
+    # centroids are unit-norm (spherical k-means)
+    assert np.allclose(np.linalg.norm(cents, axis=1), 1.0, atol=1e-5)
+
+
+def test_kmeans_clamps_to_population():
+    x = np.random.default_rng(1).standard_normal((3, 8)).astype(np.float32)
+    cents, assign = kmeans(x, 10, seed=0)
+    assert len(cents) == 3 and set(assign) <= {0, 1, 2}
+
+
+# ------------------------------------------------------------------- IVF
+
+def test_ivf_recall_and_cost_vs_flat(corpus):
+    """Acceptance: recall@k >= 0.9 vs the exact scan at the DEFAULT
+    nprobe while scoring < 30% of documents."""
+    docs, qas, enc, emb = corpus
+    k = 5
+    flat = FlatIndex(enc.dim)
+    ivf = IVFIndex(enc.dim)
+    for idx in (flat, ivf):
+        idx.add(emb, [d.doc_id for d in docs])
+    q = enc.encode([qa.question for qa in qas])
+    _, fi = flat.search(q, k)
+    _, ii = ivf.search(q, k)
+    recall = np.mean([len(set(map(int, a)) & set(map(int, b))) / k
+                      for a, b in zip(ii, fi)])
+    assert recall >= 0.9
+    assert 0.0 < ivf.last_scored_frac < 0.30
+    assert ii.dtype == np.int32
+
+
+def test_ivf_matches_flat_exactly_when_probing_everything(corpus):
+    docs, qas, enc, emb = corpus
+    flat = FlatIndex(enc.dim)
+    ivf = IVFIndex(enc.dim, n_lists=5, nprobe=5)     # probe all lists
+    for idx in (flat, ivf):
+        idx.add(emb, [d.doc_id for d in docs])
+    q = enc.encode([qa.question for qa in qas[:20]])
+    fs, fi = flat.search(q, 4)
+    s, i = ivf.search(q, 4)
+    assert ivf.last_scored_frac == 1.0
+    assert np.array_equal(np.sort(i, axis=1), np.sort(fi, axis=1))
+    assert np.allclose(np.sort(s, axis=1), np.sort(fs, axis=1), atol=1e-4)
+
+
+def test_ivf_numpy_and_kernel_paths_agree(corpus):
+    docs, qas, enc, emb = corpus
+    a = IVFIndex(enc.dim, n_lists=8, nprobe=3, use_pallas=False, seed=2)
+    b = IVFIndex(enc.dim, n_lists=8, nprobe=3, use_pallas=True, seed=2)
+    for idx in (a, b):
+        idx.add(emb[:120], list(range(120)))
+    q = enc.encode([qa.question for qa in qas[:6]])
+    sa, ia = a.search(q, 3)
+    sb, ib = b.search(q, 3)
+    assert np.array_equal(ia, ib)
+    assert np.allclose(sa, sb, atol=1e-4)
+
+
+def test_ivf_edge_cases():
+    ivf = IVFIndex(8)
+    s, i = ivf.search(np.zeros((2, 8), np.float32), 3)   # empty index
+    assert s.shape == (2, 0) and i.shape == (2, 0)
+    assert i.dtype == np.int32
+    ivf.add(np.eye(2, 8, dtype=np.float32), ["a", "b"])
+    s, i = ivf.search(np.ones((1, 8), np.float32), 5)    # k > corpus
+    assert s.shape == (1, 2)                             # clamped
+    assert ivf.payloads(i[0]) == ["a", "b"] or \
+        ivf.payloads(i[0]) == ["b", "a"]
+    assert ivf.payloads([-1, 0]) == ["a"]                # -1 fill skipped
+    s, i = ivf.search(np.ones((1, 8), np.float32), 0)    # k <= 0
+    assert s.shape == (1, 0)
+
+
+def test_ivf_retrains_after_add(corpus):
+    docs, qas, enc, emb = corpus
+    ivf = IVFIndex(enc.dim)
+    ivf.add(emb[:50], list(range(50)))
+    ivf.search(enc.encode(["what is this ?"]), 2)
+    lists_before = ivf.n_lists
+    ivf.add(emb[50:], list(range(50, len(emb))))
+    assert ivf._dirty                                    # lazy retrain
+    s, i = ivf.search(enc.encode([qas[0].question]), 2)
+    assert not ivf._dirty and ivf.n_lists >= lists_before
+    assert int(i[0, 0]) < len(emb)
+
+
+# ------------------------------------------------------------------ sketch
+
+def test_sketch_reveals_no_documents(corpus):
+    docs, qas, enc, emb = corpus
+    for kind in ("flat", "ivf"):
+        idx = build_index(enc.dim, kind)
+        idx.add(emb, [d.text for d in docs])
+        cents, sizes = idx.sketch(6, seed=0)
+        assert cents.shape[1] == enc.dim and len(cents) <= 6
+        assert sizes.sum() == len(docs)
+        # the sketch is strictly coarser than the corpus: no centroid
+        # coincides with a document embedding (counts, not content)
+        sims = cents @ emb.T
+        assert not np.any(np.isclose(sims.max(1), 1.0, atol=1e-6))
+    empty = FlatIndex(enc.dim)
+    cents, sizes = empty.sketch(4)
+    assert cents.shape == (0, enc.dim) and len(sizes) == 0
+
+
+# ------------------------------------------------------------------- cache
+
+def test_cache_hit_miss_and_threshold():
+    enc = TextEncoder(seed=0)
+    e = enc.encode(["what is the yield of bond fina1 ?",
+                    "what is the yield of bond fina1 ?",     # repeat
+                    "route of the railway trav3 ?"])          # distinct
+    cache = SemanticQueryCache(capacity=8, threshold=0.98)
+    assert cache.lookup(e[0]) is None
+    cache.insert(e[0], "ctx-a")
+    assert cache.lookup(e[1]) == "ctx-a"                 # exact repeat
+    assert cache.lookup(e[2]) is None                    # different query
+    assert cache.hits == 1 and cache.misses == 2
+    assert 0.0 < cache.hit_rate < 1.0
+
+
+def test_cache_lru_eviction():
+    cache = SemanticQueryCache(capacity=2, threshold=0.99)
+    e = np.eye(3, 8, dtype=np.float32)
+    cache.insert(e[0], "v0")
+    cache.insert(e[1], "v1")
+    assert cache.lookup(e[0]) == "v0"                    # refresh v0
+    cache.insert(e[2], "v2")                             # evicts LRU v1
+    assert len(cache) == 2
+    assert cache.lookup(e[1]) is None
+    assert cache.lookup(e[0]) == "v0" and cache.lookup(e[2]) == "v2"
+
+
+def test_cache_in_rag_pipeline_skips_probe(corpus, monkeypatch):
+    """Identical questions must be served without touching the index."""
+    docs, qas, enc, emb = corpus
+    from repro.rag.pipeline import RAGPipeline
+    index = FlatIndex(enc.dim)
+    index.add(emb, [d.text for d in docs])
+    pipe = RAGPipeline(enc, index, engine=None, tokenizer=None,
+                       top_k=3, cache=SemanticQueryCache())
+    q = qas[0].question
+    ctx1, s1 = pipe.retrieve([q])
+
+    def _boom(*a, **kw):
+        raise AssertionError("index probed despite cache hit")
+
+    monkeypatch.setattr(index, "search", _boom)
+    ctx2, s2 = pipe.retrieve([q])                        # cache hit
+    assert ctx2 == ctx1
+    assert np.allclose(s1, s2)
+    assert pipe.cache.hits == 1
