@@ -5,7 +5,16 @@ Reports tokens/sec for both paths on a dispatch-bound smoke config so
 future PRs can track serving regressions; the acceptance bar for the
 compiled path is >= 5x the Python loop.
 
+``--step-cost`` additionally measures the per-decode-step cost of the
+compiled loop at two ``max_len`` settings (decode loop only; prefill is
+excluded).  The cache rides the scan carry with donated in-place
+updates and the KV read is capped at the live context, so the per-step
+time must stay ~flat as ``max_len`` grows (ratio bar: < 1.5x between
+the two settings); rows land in ``BENCH_serve_throughput.json`` so the
+scaling regression is visible cross-PR.
+
     PYTHONPATH=src python -m benchmarks.serve_throughput
+    PYTHONPATH=src python -m benchmarks.serve_throughput --step-cost
     PYTHONPATH=src python -m benchmarks.serve_throughput \
         --arch gemma2-9b --batch 8 --new-tokens 64 --d-model 64
 """
@@ -13,6 +22,7 @@ import argparse
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_smoke_config
@@ -32,6 +42,26 @@ def time_path(fn, repeats):
     return times
 
 
+def decode_step_cost(cfg, params, prompts, gen, *, max_len, batch,
+                     repeats=10):
+    """Best-of-``repeats`` per-decode-step seconds for the compiled loop
+    at ``max_len`` (fresh prefill per repeat — the donated cache is
+    consumed by each decode call — but only the decode loop is timed)."""
+    eng = ServeEngine(cfg, params, max_len=max_len, batch_size=batch)
+    times = []
+    for r in range(repeats + 1):                     # first run compiles
+        tok, cache, key, kv_cap = eng._start(prompts, gen,
+                                             jax.random.PRNGKey(0))
+        jax.block_until_ready(tok)
+        t0 = time.perf_counter()
+        out, count, _ = eng._decode_loop(eng.params, tok, cache, key,
+                                         jnp.int32(len(prompts)), gp=gen,
+                                         kv_cap=kv_cap)
+        jax.block_until_ready((out, count))
+        times.append(time.perf_counter() - t0)
+    return min(times[1:]) / gen.max_new_tokens
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b", choices=ARCH_IDS)
@@ -41,6 +71,11 @@ def main():
     ap.add_argument("--d-model", type=int, default=32)
     ap.add_argument("--vocab", type=int, default=256)
     ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--step-cost", action="store_true",
+                    help="also measure per-decode-step time at two "
+                         "max_len settings (must stay ~flat)")
+    ap.add_argument("--step-max-lens", type=int, nargs=2,
+                    default=(256, 1024), metavar=("SMALL", "LARGE"))
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch, max_d_model=args.d_model,
@@ -70,7 +105,8 @@ def main():
         "arch": args.arch, "batch": args.batch,
         "prompt_len": args.prompt_len, "new_tokens": args.new_tokens,
         "d_model": args.d_model, "vocab": args.vocab,
-        "repeats": args.repeats, "jax": jax.__version__,
+        "repeats": args.repeats, "step_cost": bool(args.step_cost),
+        "step_max_lens": list(args.step_max_lens), "jax": jax.__version__,
         "device": jax.devices()[0].platform,
     })
     bench.add("python_loop", n_tokens / t_ref, t_ref * 1e3 / args.new_tokens,
@@ -78,10 +114,26 @@ def main():
     bench.add("compiled_loop", n_tokens / t_new,
               t_new * 1e3 / args.new_tokens, pct(ts_new, 50), pct(ts_new, 95))
     bench.add("speedup", t_ref / t_new, 0.0, 0.0, 0.0)
+    if args.step_cost:
+        small, large = args.step_max_lens
+        per = {}
+        for ml in (small, large):
+            per[ml] = decode_step_cost(cfg, params, prompts, gen,
+                                       max_len=ml, batch=args.batch)
+            bench.add(f"step_cost_max_len_{ml}", args.batch / per[ml],
+                      per[ml] * 1e3, 0.0, 0.0)
+        ratio = per[large] / per[small]
+        bench.add("step_cost_ratio", ratio, 0.0, 0.0, 0.0)
     bench.finish(["path", "tokens_per_sec", "ms_per_step",
                   "p50_call_ms", "p95_call_ms"])
     print(f"speedup: {t_ref/t_new:.1f}x "
           f"({'meets' if t_ref/t_new >= 5 else 'BELOW'} the 5x bar)")
+    if args.step_cost:
+        small, large = args.step_max_lens
+        print(f"decode step cost: {per[small]*1e3:.3f} ms @ max_len "
+              f"{small} vs {per[large]*1e3:.3f} ms @ {large} — "
+              f"{ratio:.2f}x ({'meets' if ratio < 1.5 else 'EXCEEDS'} the "
+              f"<1.5x flat-in-max_len bar)")
 
 
 if __name__ == "__main__":

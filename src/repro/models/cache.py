@@ -13,6 +13,11 @@ keep a *rolling* [nc, B, W, KV, hd] buffer (slot j holds the latest
 position p with p % W == j); recurrent slots keep their fixed-size
 states.  Slot validity/positions are derived from ``length`` instead of
 being stored, so the cache is a pure function of its arrays.
+
+All writes (``write_token``/``write_seq``/``put_cycle``) operate on the
+*stacked* buffers through cycle-indexed ``dynamic_update_slice``, so a
+cache threaded through a scan carry (and donated at the jit boundary)
+is updated in place — the model stack never rebuilds the stacks.
 """
 from __future__ import annotations
 
@@ -92,28 +97,60 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return cache
 
 
+def take_cycle(tree, cycle: jax.Array):
+    """Per-cycle slice of a cycle-stacked pytree (leading dim = nc)."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, cycle, 0, keepdims=False),
+        tree)
+
+
+def put_cycle(stacked, new_slice, cycle: jax.Array):
+    """Write a per-cycle slice back into the cycle-stacked pytree via
+    ``dynamic_update_slice`` (in place when the buffer is donated)."""
+    return jax.tree.map(
+        lambda s, n: jax.lax.dynamic_update_slice_in_dim(
+            s, n[None].astype(s.dtype), cycle, 0),
+        stacked, new_slice)
+
+
 def write_seq(kv_cache: dict, k: jax.Array, v: jax.Array,
-              start: jax.Array) -> dict:
+              start: jax.Array, cycle: jax.Array) -> dict:
     """Write a [B,S,KV,hd] prefill segment at absolute position ``start``
-    into a single-cycle cache slice [B,L,KV,hd] (full or rolling)."""
-    L = kv_cache["k"].shape[1]
+    into cycle ``cycle`` of the stacked [nc,B,L,KV,hd] buffers (full or
+    rolling)."""
+    L = kv_cache["k"].shape[2]
     S = k.shape[1]
     if S >= L:
         # rolling buffer smaller than the segment: keep the last L tokens,
         # placed so that slot j holds position p with p % L == j.
-        kk, vv = k[:, S - L:], v[:, S - L:]
+        k, v = k[:, S - L:], v[:, S - L:]
         idx = (start + S - L + jnp.arange(L)) % L      # permutation of [0,L)
-        return {"k": kv_cache["k"].at[:, idx].set(kk),
-                "v": kv_cache["v"].at[:, idx].set(vv)}
-    idx = (start + jnp.arange(S)) % L
-    return {"k": kv_cache["k"].at[:, idx].set(k),
-            "v": kv_cache["v"].at[:, idx].set(v)}
+    else:
+        idx = (start + jnp.arange(S)) % L
+
+    def put(buf, seg):
+        sl = jax.lax.dynamic_index_in_dim(buf, cycle, 0, keepdims=False)
+        sl = sl.at[:, idx].set(seg.astype(buf.dtype))
+        return jax.lax.dynamic_update_slice_in_dim(buf, sl[None], cycle, 0)
+
+    return {"k": put(kv_cache["k"], k), "v": put(kv_cache["v"], v)}
 
 
 def write_token(kv_cache: dict, k: jax.Array, v: jax.Array,
-                pos: jax.Array) -> dict:
-    """Write a single [B,1,KV,hd] token at absolute position ``pos``."""
-    L = kv_cache["k"].shape[1]
-    j = pos % L
-    return {"k": jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], k, j, 1),
-            "v": jax.lax.dynamic_update_slice_in_dim(kv_cache["v"], v, j, 1)}
+                pos: jax.Array, cycle: jax.Array) -> dict:
+    """Write a single [B,1,KV,hd] token at absolute position ``pos`` into
+    cycle ``cycle`` of the stacked [nc,B,L,KV,hd] buffers.
+
+    One single-token ``dynamic_update_slice`` per buffer, so XLA updates
+    a donated cache in place: the decode-step write is O(token), not an
+    O(L) rebuild of the whole stacked buffer."""
+    L = kv_cache["k"].shape[2]
+    j = (pos % L).astype(jnp.int32)
+    zero = jnp.zeros((), jnp.int32)
+    cyc = jnp.asarray(cycle, jnp.int32)
+
+    def put(buf, tok):
+        return jax.lax.dynamic_update_slice(
+            buf, tok[None].astype(buf.dtype), (cyc, zero, j, zero, zero))
+
+    return {"k": put(kv_cache["k"], k), "v": put(kv_cache["v"], v)}

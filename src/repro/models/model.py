@@ -33,6 +33,25 @@ def _dt(cfg: ModelConfig):
     return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
 
 
+def _capped_cycle_slice(kv_stack: dict, cycle, kv_cap):
+    """The cycle's [B,L,KV,hd] K/V buffers, statically capped to the
+    first ``kv_cap`` slots when the serving loop knows the live context
+    can never reach past them (slot index <= absolute position for both
+    full and not-yet-wrapped rolling buffers, so every dropped slot is
+    masked anyway).  Keeps the decode read O(live context) instead of
+    O(max_len)."""
+    nc, B, L, KV, hd = kv_stack["k"].shape
+    cap = L if kv_cap is None else min(kv_cap, L)
+    start = (jnp.asarray(cycle, jnp.int32), jnp.zeros((), jnp.int32),
+             jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+             jnp.zeros((), jnp.int32))
+
+    def take(buf):     # one O(cap) slice, not an O(L) read then a crop
+        return jax.lax.dynamic_slice(buf, start, (1, B, cap, KV, hd))[0]
+
+    return take(kv_stack["k"]), take(kv_stack["v"])
+
+
 class Model:
     def __init__(self, cfg: ModelConfig, moe_capacity_factor: float = 1.25,
                  ep_mesh=None):
@@ -163,18 +182,23 @@ class Model:
 
     # ---------------------------------------------------------- block bodies
 
-    def _attn_sublayer(self, p, x, kind, qpos, kpos, angles, kv_slice, mode,
-                       start, first=None):
-        """Self-attention sublayer. Returns (delta_x, new_kv_slice)."""
+    def _attn_sublayer(self, p, x, kind, qpos, kpos, angles, kv_stack, mode,
+                       start, cycle, first=None, kv_cap=None):
+        """Self-attention sublayer.  ``kv_stack`` holds the cycle-stacked
+        KV buffers ([nc,B,L,KV,hd] leaves); writes land in cycle
+        ``cycle``.  Returns (delta_x, new_kv_stack)."""
         cfg = self.cfg
         h = L.apply_norm(p["ln1"], x, cfg)
         q, k, v = L.qkv_project(p["attn"], h, cfg, angles)
         window = cfg.sliding_window if kind in ("local", "hymba") else None
         if mode == "decode":
-            new_kv = cache_lib.write_token(kv_slice, k, v, start)
-            L_buf = new_kv["k"].shape[1]
+            new_kv = cache_lib.write_token(kv_stack, k, v, start, cycle)
+            k_buf, v_buf = _capped_cycle_slice(new_kv, cycle, kv_cap)
+            L_buf = k_buf.shape[1]
             # a buffer is rolling iff it equals the window (i.e. smaller
             # than max context); otherwise slot index == absolute position
+            # (a capped buffer cannot have wrapped yet, so the capped
+            # read is index == position too)
             if window is not None and L_buf == window:
                 kv_pos = cache_lib.rolling_kv_positions(start + 1, L_buf)
             else:
@@ -182,7 +206,7 @@ class Model:
             kv_pos = jnp.broadcast_to(kv_pos, (x.shape[0], L_buf))
             if first is not None:   # mask left-padding slots
                 kv_pos = jnp.where(kv_pos >= first[:, None], kv_pos, -1)
-            a = L.decode_attention(q, new_kv["k"], new_kv["v"],
+            a = L.decode_attention(q, k_buf, v_buf,
                                    qpos[:, 0], kv_pos,
                                    window=window, softcap=cfg.attn_logit_softcap)
         else:
@@ -192,8 +216,8 @@ class Model:
                 softcap=cfg.attn_logit_softcap,
                 q_block=min(512, S), kv_block=min(512, S))
             new_kv = None
-            if kv_slice is not None:  # prefill: persist roped K/V
-                new_kv = cache_lib.write_seq(kv_slice, k, v, start)
+            if kv_stack is not None:  # prefill: persist roped K/V
+                new_kv = cache_lib.write_seq(kv_stack, k, v, start, cycle)
         return L.attention_out(p["attn"], a), new_kv
 
     def _cross_sublayer(self, p, x, enc_out, enc_kv, mode):
@@ -239,55 +263,66 @@ class Model:
             return L.apply_mlp(p["mlp"], h, cfg), 0.0
         return jnp.zeros_like(x), 0.0
 
-    def _apply_block(self, p, x, kind, ctx, cache_slice, mode):
-        """One layer. Returns (x, new_cache_slice, aux)."""
+    def _apply_block(self, p, x, kind, ctx, cache_stack, mode):
+        """One layer.  ``cache_stack`` is the slot's *cycle-stacked* state
+        (leading dim = nc) or None; reads slice cycle ``ctx["cycle"]``,
+        writes go back into the stack through cycle-indexed
+        ``dynamic_update_slice``.  Returns (x, new_cache_stack, aux)."""
         cfg = self.cfg
         aux = 0.0
-        new_slice = None
+        new_stack = None
+        cyc = ctx.get("cycle")
         if kind in ("attn", "local"):
-            kv = cache_slice
             da, new_kv = self._attn_sublayer(
-                p, x, kind, ctx["qpos"], ctx["kpos"], ctx["angles"], kv, mode,
-                ctx["start"], ctx.get("first"))
+                p, x, kind, ctx["qpos"], ctx["kpos"], ctx["angles"],
+                cache_stack, mode, ctx["start"], cyc, ctx.get("first"),
+                ctx.get("kv_cap"))
             # checkpoint_name lets the remat policy SAVE this psum
             # output instead of re-all-reducing it in the backward
             # recompute (§Perf iteration 4)
             da = jax.ad_checkpoint.checkpoint_name(da, "sublayer_out")
             x = x + da
-            new_slice = new_kv
+            new_stack = new_kv
         elif kind == "hymba":
-            kv = {k: cache_slice[k] for k in ("k", "v")} if cache_slice else None
+            kv = {k: cache_stack[k] for k in ("k", "v")} if cache_stack else None
             h = L.apply_norm(p["ln1"], x, cfg)
             # attention branch (bypasses ln1 in _attn_sublayer; replicate here)
             q, k, v = L.qkv_project(p["attn"], h, cfg, ctx["angles"])
             if mode == "decode":
-                new_kv = cache_lib.write_token(kv, k, v, ctx["start"])
-                W = new_kv["k"].shape[1]
+                new_kv = cache_lib.write_token(kv, k, v, ctx["start"], cyc)
+                k_buf, v_buf = _capped_cycle_slice(new_kv, cyc,
+                                                   ctx.get("kv_cap"))
+                W = k_buf.shape[1]
                 kv_pos = jnp.broadcast_to(
                     cache_lib.rolling_kv_positions(ctx["start"] + 1, W),
                     (x.shape[0], W))
                 if ctx.get("first") is not None:
                     kv_pos = jnp.where(kv_pos >= ctx["first"][:, None],
                                        kv_pos, -1)
-                a = L.decode_attention(q, new_kv["k"], new_kv["v"],
+                a = L.decode_attention(q, k_buf, v_buf,
                                        ctx["qpos"][:, 0], kv_pos,
                                        window=cfg.sliding_window)
-                mo, mstate = ssm.mamba_step(p["mamba"], h, cfg, cache_slice["mamba"])
+                mo, mstate = ssm.mamba_step(
+                    p["mamba"], h, cfg,
+                    cache_lib.take_cycle(cache_stack["mamba"], cyc))
             else:
                 S = x.shape[1]
                 a = L.flash_attention(q, k, v, ctx["qpos"], ctx["kpos"],
                                       causal=True, window=cfg.sliding_window,
                                       q_block=min(512, S), kv_block=min(512, S))
-                new_kv = cache_lib.write_seq(kv, k, v, ctx["start"]) if kv else None
+                new_kv = cache_lib.write_seq(kv, k, v, ctx["start"], cyc) \
+                    if kv else None
                 mo, mstate = ssm.mamba_forward(
                     p["mamba"], h, cfg,
-                    None if cache_slice is None else cache_slice["mamba"])
+                    None if cache_stack is None
+                    else cache_lib.take_cycle(cache_stack["mamba"], cyc))
             ao = L.attention_out(p["attn"], a)
             fused = 0.5 * (L.apply_norm(p["bn_a"], ao, cfg)
                            + L.apply_norm(p["bn_m"], mo, cfg))
             x = x + fused
-            if cache_slice is not None:
-                new_slice = dict(new_kv, mamba=mstate)
+            if cache_stack is not None:
+                new_stack = dict(new_kv, mamba=cache_lib.put_cycle(
+                    cache_stack["mamba"], mstate, cyc))
         elif kind in ("mlstm", "slstm"):
             h = L.apply_norm(p["ln1"], x, cfg)
             # chunkwise mLSTM for sequences: exact, MXU-shaped, and
@@ -297,74 +332,91 @@ class Model:
             fwd = ssm.mlstm_forward_chunked if kind == "mlstm" \
                 else ssm.slstm_forward
             step = ssm.mlstm_step if kind == "mlstm" else ssm.slstm_step
+            state = None if cache_stack is None \
+                else cache_lib.take_cycle(cache_stack, cyc)
             if mode == "decode":
-                y, st = step(p["cell"], h, cfg, cache_slice)
+                y, st = step(p["cell"], h, cfg, state)
             else:
-                y, st = fwd(p["cell"], h, cfg, cache_slice)
+                y, st = fwd(p["cell"], h, cfg, state)
             x = x + y
-            if cache_slice is not None:
-                new_slice = st
+            if cache_stack is not None:
+                new_stack = cache_lib.put_cycle(cache_stack, st, cyc)
         else:
             raise ValueError(kind)
         # cross-attention (whisper decoder)
         if cfg.is_encoder_decoder:
-            enc_kv = None if cache_slice is None or mode != "decode" \
-                else ctx["enc_slice"]
+            enc_kv = None if cache_stack is None or mode != "decode" \
+                else cache_lib.take_cycle(ctx["enc_slice"], cyc)
             dx, enc_kv_new = self._cross_sublayer(p, x, ctx.get("enc_out"),
                                                   enc_kv, mode)
             x = x + dx
-            ctx["_enc_kv_new"] = enc_kv_new
+            if cache_stack is None:
+                ctx["_enc_kv_new"] = enc_kv_new     # train: popped, discarded
+            elif mode == "decode":
+                ctx["_enc_kv_new"] = ctx["enc_slice"]   # read-only at decode
+            else:
+                ctx["_enc_kv_new"] = cache_lib.put_cycle(
+                    ctx["enc_slice"], enc_kv_new, cyc)
         dm, aux = self._mlp_sublayer(p, x)
         dm = jax.ad_checkpoint.checkpoint_name(dm, "sublayer_out")
         x = x + dm
-        return x, new_slice, aux
+        return x, new_stack, aux
 
     # ------------------------------------------------------------- sequence
 
     def _run_stack(self, params, x, ctx, cache, mode, remat=False):
-        """Scan the pattern-cycle stack. cache may be None (pure train)."""
+        """Scan the pattern-cycle stack. cache may be None (pure train).
+
+        With a cache, the cycle-stacked slot buffers ride in the scan
+        *carry* (not xs -> stacked ys, which re-materializes every
+        stacked buffer each step): cycle i reads its slice and writes
+        back through cycle-indexed ``dynamic_update_slice``, so XLA
+        aliases the (donated) cache in place and the per-decode-step KV
+        write is O(token) instead of an O(max_len) cache rebuild."""
         cfg = self.cfg
         have_cache = cache is not None
 
         def cycle_body(carry, xs):
-            x, aux = carry
+            x, aux, slots = carry
             # pin the residual stream to (batch-sharded, D-replicated):
             # FSDP'd projections otherwise tempt XLA into resharding
             # activations to (batch-replicated, D-sharded) layouts
             from repro.distributed.sharding import maybe_constrain
             x = maybe_constrain(x, ("pod", "data"), None, None)
-            blk_params, cache_slices = xs
-            new_slices = {}
+            blk_params, cycle = xs
+            ctx["cycle"] = cycle
+            new_slots = dict(slots)
             for name, kind in self.slots:
-                cs = cache_slices[name] if have_cache else None
+                cs = slots[name] if have_cache else None
                 if cfg.is_encoder_decoder and have_cache:
-                    ctx["enc_slice"] = cache_slices["enc"]
+                    ctx["enc_slice"] = slots["enc"]
                 x, ns, a = self._apply_block(blk_params[name], x, kind, ctx,
                                              cs, mode)
                 if have_cache:
-                    new_slices[name] = ns
+                    new_slots[name] = ns
                 aux = aux + a
             if cfg.is_encoder_decoder and have_cache:
-                new_slices["enc"] = ctx.pop("_enc_kv_new")
+                new_slots["enc"] = ctx.pop("_enc_kv_new")
             elif cfg.is_encoder_decoder:
                 ctx.pop("_enc_kv_new", None)
-            return (x, aux), (new_slices if have_cache else None)
+            return (x, aux, new_slots), None
 
         # NOTE §Perf iteration 4 (refuted trade): a remat policy saving
         # the "sublayer_out" psum results cuts collectives another 12%
         # but costs +4 GiB/device (17.5 > 16 GiB HBM) — plain remat wins.
         body = jax.checkpoint(cycle_body) if remat else cycle_body
-        xs = (params["blocks"],
-              cache["slots"] | ({"enc": cache["enc"]} if cfg.is_encoder_decoder
-                                else {}) if have_cache else None)
-        if not have_cache:
-            xs = (params["blocks"], None)
-        (x, aux), new_cache_slices = jax.lax.scan(
-            body, (x, jnp.zeros((), jnp.float32)), xs)
+        slots0 = {}
+        if have_cache:
+            slots0 = dict(cache["slots"])
+            if cfg.is_encoder_decoder:
+                slots0["enc"] = cache["enc"]
+        xs = (params["blocks"], jnp.arange(self.n_cycles, dtype=jnp.int32))
+        (x, aux, slots), _ = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32), slots0), xs)
         new_cache = None
         if have_cache:
-            enc = new_cache_slices.pop("enc", None)
-            new_cache = dict(cache, slots=new_cache_slices)
+            enc = slots.pop("enc", None)
+            new_cache = dict(cache, slots=slots)
             if enc is not None:
                 new_cache["enc"] = enc
         return x, aux, new_cache
@@ -440,8 +492,14 @@ class Model:
         return self._logits(params, x[:, -1]), cache
 
     def decode_step(self, params, token: jax.Array, cache: dict,
-                    ) -> Tuple[jax.Array, dict]:
-        """token: [B,1] int32. One serve_step: logits for the next token."""
+                    kv_cap: Optional[int] = None) -> Tuple[jax.Array, dict]:
+        """token: [B,1] int32. One serve_step: logits for the next token.
+
+        ``kv_cap`` (static) bounds the decode-side KV *read* when the
+        caller knows positions never reach past it (the serving loop
+        passes prompt_bucket + max_new_tokens): slots at index >= cap
+        are always masked, so dropping them is exact while making the
+        per-step read O(live context) instead of O(max_len)."""
         cfg = self.cfg
         B = token.shape[0]
         pos_scalar = cache["length"]
@@ -456,6 +514,7 @@ class Model:
             "angles": self._angles(positions, 1),
             "start": pos_scalar,
             "first": cache.get("first"),
+            "kv_cap": kv_cap,
         }
         x, _, cache = self._run_stack(params, x, ctx, cache, "decode")
         cache = dict(cache, length=cache["length"] + 1)

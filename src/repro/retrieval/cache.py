@@ -68,6 +68,16 @@ class SemanticQueryCache:
             self._embs = emb[None, :]
             self._values, self._used = [value], [self._tick]
             return
+        # dedup: a near-duplicate of a cached query updates that entry in
+        # place instead of accumulating copies that LRU-evict distinct
+        # queries (hot queries used to crowd out the rest of the cache)
+        sims = self._embs @ emb
+        j = int(np.argmax(sims))
+        if sims[j] >= self.threshold:
+            self._embs[j] = emb
+            self._values[j] = value
+            self._used[j] = self._tick
+            return
         if len(self._values) >= self.capacity:
             j = int(np.argmin(self._used))            # evict LRU
             self._embs[j] = emb
@@ -81,3 +91,6 @@ class SemanticQueryCache:
     def clear(self) -> None:
         self._embs = None
         self._values, self._used = [], []
+        self._tick = 0
+        self.hits = 0
+        self.misses = 0

@@ -17,11 +17,15 @@ the [B, max_new_tokens] output buffer and per-row lengths.
 
 Prompt batches are left-padded to a power-of-two *bucket* so the
 prefill jit cache is reused across calls (the static-shape analogue of
-continuous batching); the decode loop is independent of the prompt
-bucket and compiles once per (batch, GenerationParams).  Architectures
-with recurrent state (mLSTM/sLSTM/hymba) absorb pad embeddings into
-their state, so for those the batch is padded to the exact max prompt
-length instead of a bucket — identical numerics to unbucketed serving.
+continuous batching); the decode loop compiles once per (batch,
+GenerationParams, prompt bucket) — the bucket enters as the static
+``kv_cap`` that keeps the per-step KV read O(live context).
+Architectures with recurrent state (mLSTM/sLSTM/hymba) absorb pad
+embeddings into their state, so for those the batch is padded to the
+exact max prompt length instead of a bucket — identical numerics to
+unbucketed serving — and ``kv_cap`` is skipped (their KV, if any, sits
+in window-sized buffers already, and a per-prompt-length static cap
+would recompile the decode loop per length).
 
 ``generate_reference`` keeps the original per-token Python loop (one
 host sync per token) for parity tests and the throughput benchmark.
@@ -59,11 +63,16 @@ class ServeEngine:
         # recurrent state absorbs pad embeddings -> exact-length padding
         self._exact_length = any(kind in _RECURRENT_KINDS
                                  for _, kind in self.model.slots)
-        self._decode = jax.jit(self.model.decode_step)
+        # donate the cache: decode writes are cycle-indexed
+        # dynamic_update_slice ops on the (scan/while_loop) carry, so XLA
+        # updates the buffers in place — no decode-step cache copy
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,),
+                               static_argnames=("kv_cap",))
         self._prefill_sample = jax.jit(self._prefill_sample_impl,
                                        static_argnames=("gp",))
         self._decode_loop = jax.jit(self._decode_loop_impl,
-                                    static_argnames=("gp",))
+                                    static_argnames=("gp", "kv_cap"),
+                                    donate_argnums=(2,))
 
     # ---------------------------------------------------------------- batching
 
@@ -98,7 +107,9 @@ class ServeEngine:
         ``max_new_tokens`` decode steps.  Exact-length for recurrent
         architectures (pads would perturb their state)."""
         if self._exact_length:
-            return prompt_len
+            # never a 0-length pad target (an all-empty wave would
+            # otherwise build [B, 0] tokens and fail inside jit)
+            return max(1, prompt_len)
         cap = max(prompt_len, self.max_len - max_new_tokens)
         b = _MIN_BUCKET
         while b < prompt_len:
@@ -112,7 +123,7 @@ class ServeEngine:
         first-valid-position [B])."""
         B = self.batch_size
         assert len(prompts) <= B
-        L = max(pad_to, max(len(p) for p in prompts))
+        L = max(1, pad_to, max(len(p) for p in prompts))
         toks = np.full((B, L), self.pad_id, np.int32)
         first = np.full((B,), L, np.int32)     # unused rows: everything padded
         for i, p in enumerate(prompts):
@@ -141,11 +152,13 @@ class ServeEngine:
         return sample_token(logits, gp, key, 0), cache
 
     def _decode_loop_impl(self, params, tok, cache, key, n_active,
-                          gp: GenerationParams):
+                          gp: GenerationParams, kv_cap=None):
         """Compiled decode: carries (t, token, cache, done, out, count)
         through a ``while_loop``; exits early once all active rows are
-        done.  Returns the [B, max_new] output buffer and per-row
-        emitted-token counts."""
+        done.  Returns the [B, max_new] output buffer, per-row
+        emitted-token counts, and the final cache — returned (and never
+        copied back to host) so the donated input cache aliases it and
+        the while_loop mutates the buffers in place."""
         B = tok.shape[0]
         max_new = gp.max_new_tokens
         out = jnp.zeros((B, max_new), jnp.int32)
@@ -168,7 +181,8 @@ class ServeEngine:
 
             def step(args):
                 tok, cache = args
-                logits, cache = self.model.decode_step(params, tok, cache)
+                logits, cache = self.model.decode_step(params, tok, cache,
+                                                       kv_cap=kv_cap)
                 return sample_token(logits, gp, key, t + 1), cache
 
             # skip the trailing decode when this was the last recorded
@@ -178,11 +192,31 @@ class ServeEngine:
                 lambda args: args, (tok, cache))
             return (t + 1, tok, cache, done, out, count)
 
-        _, _, _, _, out, count = jax.lax.while_loop(cond, body, state)
-        return out, count
+        _, _, cache, _, out, count = jax.lax.while_loop(cond, body, state)
+        return out, count, cache
+
+    def _route_empty_prompts(self, prompts, gen: GenerationParams, key,
+                             generate_fn) -> Optional[List[List[int]]]:
+        """Empty prompts condition on nothing, so they get empty
+        completions; the remaining rows run as a smaller wave.  Returns
+        None when every prompt is non-empty (the common case).  Keeps an
+        all-empty wave from ever reaching jit (on exact-length recurrent
+        architectures it used to build a [B, 0] token batch and fail)."""
+        keep = [i for i, p in enumerate(prompts) if len(p)]
+        if len(keep) == len(prompts):
+            return None
+        outs: List[List[int]] = [[] for _ in prompts]
+        if keep:
+            sub = generate_fn([prompts[i] for i in keep], key=key, gen=gen)
+            for i, o in zip(keep, sub):
+                outs[i] = o
+        return outs
 
     def _start(self, prompts, gen: GenerationParams, key):
-        """Shared prompt-side setup: pad, prefill, sample token 0."""
+        """Shared prompt-side setup: pad, prefill, sample token 0.
+        Returns (token, cache, key, kv_cap) — ``kv_cap`` is the static
+        bound on absolute positions this batch can reach (padded prompt
+        length + decode budget), which caps the decode-side KV read."""
         if gen.max_new_tokens >= self.max_len:
             raise ValueError(
                 f"max_new_tokens={gen.max_new_tokens} does not fit the "
@@ -195,7 +229,13 @@ class ServeEngine:
         key = key if key is not None else jax.random.PRNGKey(0)
         tok, cache = self._prefill_sample(self.params, jnp.asarray(toks),
                                           jnp.asarray(first), key, gp=gen)
-        return tok, cache, key
+        # exact-length architectures keep KV (if any) in window-sized
+        # buffers, so the cap buys nothing there while its per-prompt-
+        # length static value would recompile the decode loop per length;
+        # bucketed archs get one decode program per prompt bucket
+        kv_cap = None if self._exact_length else \
+            min(self.max_len, toks.shape[1] + gen.max_new_tokens)
+        return tok, cache, key, kv_cap
 
     # ----------------------------------------------------------------- public
 
@@ -216,9 +256,13 @@ class ServeEngine:
                                    temperature=temperature, eos_id=eos_id)
         if not prompts or gen.max_new_tokens <= 0:
             return [[] for _ in prompts]
-        tok, cache, key = self._start(prompts, gen, key)
-        out, count = self._decode_loop(self.params, tok, cache, key,
-                                       jnp.int32(len(prompts)), gp=gen)
+        empties = self._route_empty_prompts(prompts, gen, key, self.generate)
+        if empties is not None:
+            return empties
+        tok, cache, key, kv_cap = self._start(prompts, gen, key)
+        out, count, _ = self._decode_loop(self.params, tok, cache, key,
+                                          jnp.int32(len(prompts)), gp=gen,
+                                          kv_cap=kv_cap)
         out = np.asarray(out)                       # the one host transfer
         count = np.asarray(count)
         return [out[i, :count[i]].tolist() for i in range(len(prompts))]
@@ -237,7 +281,11 @@ class ServeEngine:
                                    temperature=temperature, eos_id=eos_id)
         if not prompts or gen.max_new_tokens <= 0:
             return [[] for _ in prompts]
-        tok, cache, key = self._start(prompts, gen, key)
+        empties = self._route_empty_prompts(prompts, gen, key,
+                                            self.generate_reference)
+        if empties is not None:
+            return empties
+        tok, cache, key, kv_cap = self._start(prompts, gen, key)
         B = self.batch_size
         outs: List[List[int]] = [[] for _ in range(B)]
         done = [False] * B
@@ -250,6 +298,7 @@ class ServeEngine:
                         done[i] = True
             if all(done[:len(prompts)]):
                 break
-            logits, cache = self._decode(self.params, tok, cache)
+            logits, cache = self._decode(self.params, tok, cache,
+                                         kv_cap=kv_cap)
             tok = sample_token(logits, gen, key, t + 1)
         return outs[:len(prompts)]

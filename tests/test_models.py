@@ -2,12 +2,15 @@
 mLSTM == sequential, MoE dropless consistency, cache semantics."""
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 from _hyp import given, settings, st
 
 from repro.configs import get_smoke_config
 from repro.models import Model, ssm
-from repro.models.cache import full_kv_positions, rolling_kv_positions
+from repro.models.cache import (full_kv_positions, rolling_kv_positions,
+                                take_cycle, put_cycle, write_seq,
+                                write_token)
 
 
 @pytest.mark.parametrize("arch", ["llama3-8b", "gemma2-9b", "hymba-1.5b",
@@ -104,3 +107,47 @@ def test_full_positions_properties(length, smax):
             assert p == i
         else:
             assert p == -1
+
+
+def test_write_token_cycle_indexed():
+    """write_token touches exactly one (cycle, pos % L) slot of the
+    stacked buffers and leaves everything else bit-identical."""
+    nc, B, L, KV, hd = 3, 2, 4, 1, 2
+    kv = {"k": jnp.arange(nc * B * L * KV * hd, dtype=jnp.float32
+                          ).reshape(nc, B, L, KV, hd),
+          "v": jnp.zeros((nc, B, L, KV, hd), jnp.float32)}
+    tok = jnp.full((B, 1, KV, hd), 7.0)
+    pos = jnp.asarray(5, jnp.int32)                  # 5 % 4 == slot 1
+    out = write_token(kv, tok, tok, pos, jnp.asarray(1, jnp.int32))
+    ref_k = np.asarray(kv["k"]).copy()
+    ref_k[1, :, 1] = 7.0
+    assert np.array_equal(np.asarray(out["k"]), ref_k)
+    assert np.asarray(out["v"])[1, :, 1].min() == 7.0
+    assert np.asarray(out["v"]).sum() == 7.0 * B * KV * hd
+
+
+def test_write_seq_wraps_rolling_buffer():
+    """A prefill segment longer than the rolling buffer keeps the last L
+    tokens with slot j holding position p, p % L == j — only in the
+    target cycle."""
+    nc, B, L, KV, hd = 2, 1, 4, 1, 1
+    kv = {"k": jnp.zeros((nc, B, L, KV, hd), jnp.float32),
+          "v": jnp.zeros((nc, B, L, KV, hd), jnp.float32)}
+    S = 6                                            # positions 0..5
+    seg = jnp.arange(S, dtype=jnp.float32).reshape(B, S, KV, hd)
+    out = write_seq(kv, seg, seg, jnp.asarray(0, jnp.int32),
+                    jnp.asarray(1, jnp.int32))
+    got = np.asarray(out["k"])[1, 0, :, 0, 0]
+    # kept positions 2..5; slot j holds the position with p % 4 == j
+    assert got.tolist() == [4.0, 5.0, 2.0, 3.0]
+    assert np.asarray(out["k"])[0].sum() == 0.0      # other cycle untouched
+
+
+def test_take_put_cycle_roundtrip():
+    tree = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 2, 2)}
+    cyc = jnp.asarray(2, jnp.int32)
+    sl = take_cycle(tree, cyc)
+    assert sl["a"].shape == (2, 2)
+    back = put_cycle(tree, {"a": sl["a"] + 100.0}, cyc)
+    assert np.asarray(back["a"])[2].min() == 108.0
+    assert np.array_equal(np.asarray(back["a"])[:2], np.asarray(tree["a"])[:2])

@@ -190,6 +190,39 @@ def test_cache_lru_eviction():
     assert cache.lookup(e[0]) == "v0" and cache.lookup(e[2]) == "v2"
 
 
+def test_cache_insert_dedups_near_duplicates():
+    """Re-inserting a (near-)duplicate embedding must update the matching
+    entry in place — a hot query must not accumulate copies that
+    LRU-evict distinct queries."""
+    cache = SemanticQueryCache(capacity=2, threshold=0.98)
+    e = np.eye(3, 8, dtype=np.float32)
+    near = e[0] + 0.01 * e[2]                            # cosine ~0.99995
+    cache.insert(e[0], "v0")
+    cache.insert(near, "v0-updated")                     # dedup, not append
+    assert len(cache) == 1
+    assert cache.lookup(e[0]) == "v0-updated"
+    cache.insert(e[1], "v1")
+    assert len(cache) == 2
+    for _ in range(5):                                   # hot query spam
+        cache.insert(e[0], "v0-hot")
+    assert len(cache) == 2                               # v1 never evicted
+    assert cache.lookup(e[1]) == "v1"
+    assert cache.lookup(e[0]) == "v0-hot"
+
+
+def test_cache_clear_resets_counters():
+    cache = SemanticQueryCache(capacity=4)
+    e = np.eye(2, 8, dtype=np.float32)
+    cache.insert(e[0], "v0")
+    assert cache.lookup(e[0]) == "v0" and cache.lookup(e[1]) is None
+    assert cache.hits == 1 and cache.misses == 1 and cache._tick > 0
+    cache.clear()
+    assert len(cache) == 0
+    assert cache.hits == 0 and cache.misses == 0 and cache._tick == 0
+    assert cache.hit_rate == 0.0
+    assert cache.lookup(e[0]) is None                    # empty after clear
+
+
 def test_cache_in_rag_pipeline_skips_probe(corpus, monkeypatch):
     """Identical questions must be served without touching the index."""
     docs, qas, enc, emb = corpus

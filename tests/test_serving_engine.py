@@ -71,6 +71,55 @@ def test_eos_early_exit(key):
         assert [len(o) for o in outs] == [1, 1]
 
 
+# --------------------------------------------------------- O(window) decode
+
+
+def test_rolling_window_wraparound_parity(key):
+    """Decode far enough past the sliding window that the rolling buffer
+    wraps (slot = pos % W overwrites prompt slots): the carry-threaded
+    compiled loop must still match the reference loop exactly."""
+    eng = make_engine("gemma2-9b", key, max_len=64)
+    W = eng.cfg.sliding_window
+    assert W is not None and W < 32           # smoke window actually rolls
+    new = W + 8                               # prompt(6) + new > W: wraps
+    prompts = [[1, 2, 3, 4, 5, 6], [7, 8, 9, 10, 11, 12]]
+    ref = eng.generate_reference(prompts, max_new_tokens=new)
+    out = eng.generate(prompts, max_new_tokens=new)
+    assert out == ref
+    assert all(len(o) == new for o in out)
+
+
+def test_hymba_wraparound_parity(key):
+    """Same wraparound check for the hybrid rolling-KV + mamba cache."""
+    eng = make_engine("hymba-1.5b", key, max_len=64)
+    W = eng.cfg.sliding_window
+    new = W + 6
+    prompts = [[1, 2, 3, 4], [5, 6, 7, 8]]
+    ref = eng.generate_reference(prompts, max_new_tokens=new)
+    out = eng.generate(prompts, max_new_tokens=new)
+    assert out == ref
+
+
+def test_decode_step_cost_flat_in_max_len(key):
+    """Per-decode-step time must not scale with max_len: the cache rides
+    the scan carry (in-place donated writes) and the KV read is capped
+    at the live context.  Before the carry-threading this ratio was
+    ~linear in max_len (>= 3x for 4x the cache).  Reuses the timing
+    harness of ``serve_throughput --step-cost`` (the CI smoke with the
+    tighter 1.5x bar) so the two measurements cannot drift apart."""
+    from benchmarks.serve_throughput import decode_step_cost
+    cfg = get_smoke_config("llama3-8b", max_d_model=32, vocab=128)
+    m = Model(cfg)
+    params = m.init_params(key, max_seq=64)
+    gen = GenerationParams(max_new_tokens=24)
+    prompts = [[1, 2, 3, 4], [5, 6, 7, 8]]
+    per = {ml: decode_step_cost(cfg, params, prompts, gen,
+                                max_len=ml, batch=2, repeats=8)
+           for ml in (256, 1024)}
+    # generous CI bound (the serve_throughput smoke bar is 1.5x)
+    assert per[1024] < 2.0 * per[256], per
+
+
 # ---------------------------------------------------------------- sampling
 
 
@@ -154,6 +203,28 @@ def test_generate_empty_batch(key):
     assert eng.generate_reference([]) == []
     assert eng.generate([[1, 2]], max_new_tokens=0) == [[]]
     assert eng.generate_reference([[1, 2]], max_new_tokens=0) == [[]]
+
+
+def test_generate_empty_prompts(key):
+    """Empty prompts get empty completions; an all-empty wave never
+    reaches jit.  Regression: on exact-length recurrent architectures
+    ``prompt_bucket(0) == 0`` made ``_pad_batch`` build a [B, 0] token
+    batch that failed inside jit."""
+    eng = make_engine("llama3-8b", key)
+    assert eng.generate([[]]) == [[]]
+    assert eng.generate_reference([[]]) == [[]]
+    # mixed wave: the non-empty rows run, and match a direct call
+    outs = eng.generate([[], [1, 2, 3]], max_new_tokens=4)
+    assert outs[0] == [] and len(outs[1]) == 4
+    assert outs[1] == eng.generate([[1, 2, 3]], max_new_tokens=4)[0]
+    assert eng.generate_reference([[], [1, 2, 3]], max_new_tokens=4) == outs
+    # exact-length recurrent arch (the original failure mode)
+    engr = make_engine("xlstm-350m", key)
+    assert engr._exact_length and engr.prompt_bucket(0) >= 1
+    assert engr.generate([[], []]) == [[], []]
+    assert engr.generate_reference([[]]) == [[]]
+    mixed = engr.generate([[], [5, 6, 7]], max_new_tokens=3)
+    assert mixed[0] == [] and len(mixed[1]) == 3
 
 
 def test_overlong_prompt_truncates_left_with_warning(key):
