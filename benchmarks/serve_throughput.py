@@ -13,8 +13,17 @@ time must stay ~flat as ``max_len`` grows (ratio bar: < 1.5x between
 the two settings); rows land in ``BENCH_serve_throughput.json`` so the
 scaling regression is visible cross-PR.
 
+``--continuous`` replays a mixed-length, mixed-budget smoke trace
+through the synchronous-wave ``RequestQueue`` and through
+``ContinuousQueue`` (chunked prefill + per-slot refill) and writes
+per-request p50/p95 latency and time-to-first-token for both modes
+into ``BENCH_serve_continuous.json``.  Bars: continuous p95 latency
+and mean TTFT < the wave baseline (a wave runs to its slowest row, so
+short requests queue behind stragglers).
+
     PYTHONPATH=src python -m benchmarks.serve_throughput
     PYTHONPATH=src python -m benchmarks.serve_throughput --step-cost
+    PYTHONPATH=src python -m benchmarks.serve_throughput --continuous
     PYTHONPATH=src python -m benchmarks.serve_throughput \
         --arch gemma2-9b --batch 8 --new-tokens 64 --d-model 64
 """
@@ -27,7 +36,8 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_smoke_config
 from repro.models import Model
-from repro.serving import GenerationParams, ServeEngine
+from repro.serving import (ContinuousQueue, GenerationParams, RequestQueue,
+                           ServeEngine)
 
 from benchmarks.common import Bench
 
@@ -62,6 +72,99 @@ def decode_step_cost(cfg, params, prompts, gen, *, max_len, batch,
     return min(times[1:]) / gen.max_new_tokens
 
 
+def mixed_trace(n: int, vocab: int, max_budget: int):
+    """Deterministic mixed-length prompts + mixed decode budgets — the
+    workload where synchronous waves lose: short requests wait for the
+    wave's straggler."""
+    plens = (4, 26, 11, 40, 7, 18, 33, 9)
+    budgets = (4, max_budget, 8, max_budget // 2, 6, 12, 3, max_budget)
+    prompts = [[(5 + 7 * i + j) % (vocab - 5) + 5
+                for j in range(plens[i % len(plens)])] for i in range(n)]
+    return prompts, [min(max_budget, budgets[i % len(budgets)])
+                     for i in range(n)]
+
+
+def run_wave_trace(eng, gen, prompts):
+    """Wave baseline: per-request latency = its wave's completion time
+    (tokens of a wave only exist when the whole wave returns, so TTFT
+    == latency), every wave decoding the full shared budget."""
+    queue = RequestQueue(eng, gen)
+    rids = queue.submit_all(prompts)
+    elapsed = []
+    t0 = time.perf_counter()
+    while queue.pending():
+        queue.step()
+        elapsed.append(time.perf_counter() - t0)
+    lat = [elapsed[queue.result(r).wave] for r in rids]
+    toks = sum(len(queue.result(r).tokens) for r in rids)
+    return lat, lat, toks, time.perf_counter() - t0, queue.stats.waves
+
+
+def run_continuous_trace(eng, gen, prompts, budgets):
+    queue = ContinuousQueue(eng, gen)
+    rids = queue.submit_all(prompts, budgets)
+    t0 = time.perf_counter()
+    queue.run()
+    wall = time.perf_counter() - t0
+    lat = [queue.result(r).done_s for r in rids]
+    ttft = [queue.result(r).ttft_s for r in rids]
+    return lat, ttft, queue.stats.tokens_out, wall, queue.stats
+
+
+def continuous_benchmark(args):
+    """Wave vs continuous on the mixed trace; own Bench file (the rows
+    have their own header).  Runs its own decode-bound smoke shape
+    (d_model 256, batch 4, budget cap 48): on a dispatch-bound tiny
+    model the wave path's few fused calls win on pure overhead, which
+    is not the regime continuous batching exists for."""
+    d_model, vocab, batch, max_budget = 256, 1024, 4, 48
+    cfg = get_smoke_config(args.arch, max_d_model=d_model, vocab=vocab)
+    params = Model(cfg).init_params(jax.random.PRNGKey(0), max_seq=256)
+    max_len = 64 + 4 * max_budget
+    eng = ServeEngine(cfg, params, max_len=max_len, batch_size=batch,
+                      prefill_chunk=args.prefill_chunk)
+    gen = GenerationParams(max_new_tokens=max_budget)
+    n = 6 * batch
+    prompts, budgets = mixed_trace(n, cfg.vocab_size, max_budget)
+
+    # warm both paths (compiles every bucket / chunk / segment program)
+    run_wave_trace(eng, gen, prompts)
+    run_continuous_trace(eng, gen, prompts, budgets)
+
+    w_lat, w_ttft, w_toks, w_wall, w_waves = run_wave_trace(
+        eng, gen, prompts)
+    c_lat, c_ttft, c_toks, c_wall, st = run_continuous_trace(
+        eng, gen, prompts, budgets)
+
+    def pct(xs, q):
+        return float(np.percentile(np.asarray(xs) * 1e3, q))
+
+    bench = Bench("serve_continuous", config={
+        "arch": args.arch, "batch": batch, "n_requests": n,
+        "max_new_tokens": max_budget, "prefill_chunk": args.prefill_chunk,
+        "max_len": max_len, "d_model": d_model, "vocab": vocab,
+        "jax": jax.__version__, "device": jax.devices()[0].platform,
+    })
+    # one row per mode, every column true to its header; ratios are
+    # derived (continuous row / wave row), not stored
+    bench.add("wave", pct(w_lat, 50), pct(w_lat, 95),
+              float(np.mean(w_ttft) * 1e3), pct(w_ttft, 95),
+              w_toks, w_wall * 1e3, 0, w_waves)
+    bench.add("continuous", pct(c_lat, 50), pct(c_lat, 95),
+              float(np.mean(c_ttft) * 1e3), pct(c_ttft, 95),
+              c_toks, c_wall * 1e3, st.refills, st.segments)
+    bench.finish(["mode", "p50_latency_ms", "p95_latency_ms",
+                  "ttft_mean_ms", "ttft_p95_ms", "tokens_out", "wall_ms",
+                  "refills", "dispatches"])
+    p95_ratio = pct(c_lat, 95) / max(pct(w_lat, 95), 1e-9)
+    ttft_ratio = float(np.mean(c_ttft) / max(np.mean(w_ttft), 1e-9))
+    print(f"continuous vs wave: p95 latency {p95_ratio:.2f}x, "
+          f"mean TTFT {ttft_ratio:.2f}x "
+          f"({'meets' if p95_ratio < 1.0 and ttft_ratio < 1.0 else 'MISSES'}"
+          f" the <1.0x improvement bar; {st.refills} refills, "
+          f"{st.frames} frames)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b", choices=ARCH_IDS)
@@ -76,6 +179,12 @@ def main():
                          "max_len settings (must stay ~flat)")
     ap.add_argument("--step-max-lens", type=int, nargs=2,
                     default=(256, 1024), metavar=("SMALL", "LARGE"))
+    ap.add_argument("--continuous", action="store_true",
+                    help="also benchmark continuous batching vs the "
+                         "synchronous-wave baseline on a mixed-length "
+                         "trace (own BENCH_serve_continuous.json)")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="chunk size of the continuous prefill program")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch, max_d_model=args.d_model,
@@ -134,6 +243,8 @@ def main():
               f"{small} vs {per[large]*1e3:.3f} ms @ {large} — "
               f"{ratio:.2f}x ({'meets' if ratio < 1.5 else 'EXCEEDS'} the "
               f"<1.5x flat-in-max_len bar)")
+    if args.continuous:
+        continuous_benchmark(args)
 
 
 if __name__ == "__main__":

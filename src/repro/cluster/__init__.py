@@ -1,6 +1,8 @@
 """Live edge-cluster runtime: the hierarchical scheduler driving real
-per-node ServeEngines end-to-end (measured latency/quality, no oracles),
-plus sketch-routed cross-node federated retrieval.
+per-node ServeEngines end-to-end (measured latency/quality, no
+oracles), with continuous-batching request scheduling on each node and
+sketch-routed cross-node federated retrieval.  Lifecycle walkthrough:
+docs/ARCHITECTURE.md ("a query in the cluster").
 """
 from repro.cluster.federation import (CentroidSketch,  # noqa: F401
                                       FederatedRetriever, FederationStats,

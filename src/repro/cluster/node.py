@@ -10,15 +10,18 @@ It owns
   * optionally a ``SemanticQueryCache`` (repeat/near-duplicate queries
     skip the index probe) and a ``FederatedRetriever`` handle
     (sketch-routed cross-node retrieval; see ``cluster.federation``),
-  * a ``RequestQueue`` per slot that packs the assigned queries into
-    bucketed waves over the engine's static slots.
+  * a request scheduler per slot: ``ContinuousQueue`` by default —
+    chunked prefill (one static [B, C] program, no per-prompt-length
+    recompile on the recurrent xlstm/hymba nodes) with per-slot refill
+    the moment a row finishes — or the synchronous ``RequestQueue``
+    wave fallback (``queue="wave"``).
 
 ``process_slot`` measures the real wall-clock path per query —
-retrieval (encoder dot-products through the top-k kernel) + its wave's
-prefill/decode time, accumulated over earlier waves in the slot (queue
-wait) — and scores answer quality with ``metrics.text.composite_quality``
-against the reference.  Queries whose measured latency exceeds the SLO
-are dropped (quality 0, the paper's invalid-query rule).
+retrieval (encoder dot-products through the top-k kernel) + generation
+time until that query's completion, queue wait included — and scores
+answer quality with ``metrics.text.composite_quality`` against the
+reference.  Queries whose measured latency exceeds the SLO are dropped
+(quality 0, the paper's invalid-query rule).
 
 ``profile`` replaces the simulator's oracle-based burst profiling with a
 throughput measurement: one warm-up wave (absorbs jit compilation), one
@@ -45,13 +48,14 @@ from repro.retrieval.encoder import TextEncoder
 from repro.retrieval.index import build_index
 from repro.serving.engine import ServeEngine
 from repro.serving.sampling import GenerationParams
-from repro.serving.scheduler import RequestQueue
+from repro.serving.scheduler import ContinuousQueue, RequestQueue
 
 
 @dataclass
 class LiveNodeStats:
     slots: int = 0
-    waves: int = 0
+    waves: int = 0                    # engine rounds (waves / frames)
+    refills: int = 0                  # continuous per-slot swaps
     queries: int = 0
     drops: int = 0
     tokens_out: int = 0
@@ -76,15 +80,22 @@ class LiveEdgeNode:
                  max_len: int = 256, top_k: int = 2,
                  max_new_tokens: int = 8, seed: int = 0,
                  index_kind: str = "flat", nprobe: Optional[int] = None,
-                 cache: Optional[SemanticQueryCache] = None):
+                 cache: Optional[SemanticQueryCache] = None,
+                 queue: str = "continuous", prefill_chunk: int = 32):
+        if queue not in ("continuous", "wave"):
+            raise ValueError(f"queue={queue!r} (continuous|wave)")
         self.node_id = node_id
         self.arch = arch
         self.docs = list(docs)
         self.tok = tokenizer
         self.encoder = encoder
         self.top_k = top_k
-        self.engine = ServeEngine(cfg, params, max_len=max_len,
-                                  batch_size=batch_size)
+        self.queue_kind = queue
+        # chunk must leave decode room; shrink for tiny test caches
+        chunk = min(prefill_chunk, max(1, (max_len - max_new_tokens) // 2))
+        self.engine = ServeEngine(
+            cfg, params, max_len=max_len, batch_size=batch_size,
+            prefill_chunk=chunk if queue == "continuous" else None)
         self.gen = GenerationParams(max_new_tokens=max_new_tokens,
                                     eos_id=EOS)
         index_kw = {"nprobe": nprobe} if index_kind == "ivf" else {}
@@ -165,20 +176,33 @@ class LiveEdgeNode:
         t_retrieval = time.perf_counter() - t0
         self.stats.retrieval_s += t_retrieval
 
-        queue = RequestQueue(self.engine, self.gen,
-                             key=jax.random.fold_in(self._key,
-                                                    self.stats.slots))
+        slot_key = jax.random.fold_in(self._key, self.stats.slots)
         prompts = [build_prompt(q.question, c)
                    for q, c in zip(queries, contexts)]
-        rids = queue.submit_all(self.tok.encode(p, bos=True)
-                                for p in prompts)
-        wave_elapsed: List[float] = []
-        t0 = time.perf_counter()
-        while queue.pending():
-            queue.step()
-            wave_elapsed.append(time.perf_counter() - t0)
-        self.stats.generate_s += wave_elapsed[-1] if wave_elapsed else 0.0
-        self.stats.waves += queue.stats.waves
+        token_prompts = [self.tok.encode(p, bos=True) for p in prompts]
+        done_s: Dict[int, float] = {}      # rid -> completion time in slot
+        if self.queue_kind == "continuous":
+            queue = ContinuousQueue(self.engine, self.gen, key=slot_key)
+            rids = queue.submit_all(token_prompts)
+            t0 = time.perf_counter()
+            queue.run()
+            self.stats.generate_s += time.perf_counter() - t0
+            self.stats.waves += queue.stats.frames
+            self.stats.refills += queue.stats.refills
+            for rid in rids:
+                done_s[rid] = queue.result(rid).done_s
+        else:
+            queue = RequestQueue(self.engine, self.gen, key=slot_key)
+            rids = queue.submit_all(token_prompts)
+            wave_elapsed: List[float] = []
+            t0 = time.perf_counter()
+            while queue.pending():
+                queue.step()
+                wave_elapsed.append(time.perf_counter() - t0)
+            self.stats.generate_s += wave_elapsed[-1] if wave_elapsed else 0.0
+            self.stats.waves += queue.stats.waves
+            for rid in rids:
+                done_s[rid] = wave_elapsed[queue.result(rid).wave]
         self.stats.tokens_out += queue.stats.tokens_out
 
         results: List[QueryResult] = []
@@ -186,7 +210,7 @@ class LiveEdgeNode:
         self.last_sources = {}
         for q, rid, ctx, src in zip(queries, rids, contexts, sources):
             comp = queue.result(rid)
-            latency = t_retrieval + wave_elapsed[comp.wave]
+            latency = t_retrieval + done_s[rid]
             answer = self.tok.decode(comp.tokens)
             dropped = latency > slo_s
             quality = 0.0 if dropped else composite_quality(answer,
@@ -202,13 +226,18 @@ class LiveEdgeNode:
 
     # ------------------------------------------------------------ profiling
 
+    def _make_queue(self, key=None):
+        if self.queue_kind == "continuous":
+            return ContinuousQueue(self.engine, self.gen, key=key)
+        return RequestQueue(self.engine, self.gen, key=key)
+
     def profile(self, calib_queries: int = 0) -> CapacityFunction:
         """Measured-throughput capacity: serve a calibration burst of
-        *varied-length* prompts (so bucket recompiles — the dominant
-        cost on exact-length recurrent architectures — show up in the
-        measurement, as they do in real slots), then extrapolate
-        C(L) = qps * L for the inter-node scheduler.  One warm-up wave
-        first, so a single compile doesn't dominate the estimate."""
+        *varied-length* prompts through the same scheduler the slots
+        use (so the serving path's compile/refill behavior shows up in
+        the measurement), then extrapolate C(L) = qps * L for the
+        inter-node scheduler.  One warm-up pass first, so one-time
+        compiles don't dominate the estimate."""
         n = calib_queries or 2 * self.engine.batch_size
         texts = [d.text for d in self.docs] or ["profile warm up prompt"]
         prompts = []
@@ -218,10 +247,11 @@ class LiveEdgeNode:
             n_ctx = max(1, 1 + i % max(self.top_k, 1))
             prompts.append(self.tok.encode(
                 build_prompt("what is this ?", [ctx] * n_ctx), bos=True))
-        self.engine.generate(prompts[:self.engine.batch_size],
-                             gen=self.gen)                     # warm-up
+        warm = self._make_queue()                              # warm-up
+        warm.submit_all(prompts[:self.engine.batch_size])
+        warm.run()
         t0 = time.perf_counter()
-        queue = RequestQueue(self.engine, self.gen)
+        queue = self._make_queue()
         queue.submit_all(prompts)
         queue.run()
         elapsed = max(time.perf_counter() - t0, 1e-6)

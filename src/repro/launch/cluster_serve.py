@@ -60,7 +60,8 @@ def build_cluster(n_nodes: int, *, smoke: bool = True, entities: int = 8,
                   index_kind: str = "flat", nprobe=None,
                   cache: bool = False, federated: bool = False,
                   fanout: int = 2, sketch_centroids: int = 8,
-                  ckpt=None):
+                  ckpt=None, queue: str = "continuous",
+                  prefill_chunk: int = 32):
     """Corpus + tokenizer + N live nodes + PPO identifier.  Returns
     (nodes, workload-ready qas, tokenizer, encoder, identifier,
     coverage matrix).  ``ckpt`` loads ``examples/train_tiny.py``
@@ -103,7 +104,8 @@ def build_cluster(n_nodes: int, *, smoke: bool = True, entities: int = 8,
             batch_size=batch, max_len=max_len, top_k=top_k,
             max_new_tokens=new_tokens, seed=seed + 10 * n,
             index_kind=index_kind, nprobe=nprobe,
-            cache=SemanticQueryCache() if cache else None))
+            cache=SemanticQueryCache() if cache else None,
+            queue=queue, prefill_chunk=prefill_chunk))
     if federated:
         enable_federation(nodes, fanout=fanout,
                           n_centroids=sketch_centroids, seed=seed)
@@ -150,6 +152,14 @@ def main():
     ap.add_argument("--ckpt", default=None,
                     help="examples/train_tiny.py checkpoint (.npz); "
                          "loads into matching-arch nodes")
+    ap.add_argument("--queue", default="continuous",
+                    choices=["continuous", "wave"],
+                    help="per-node request scheduler: continuous "
+                         "batching (chunked prefill + per-slot refill) "
+                         "or synchronous waves")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt chunk size of the continuous prefill "
+                         "program")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -163,7 +173,8 @@ def main():
         top_k=args.top_k, seed=args.seed,
         update_threshold=max(4, args.per_slot),
         index_kind=args.index, nprobe=args.nprobe, cache=args.cache,
-        federated=args.federated, fanout=args.fanout, ckpt=args.ckpt)
+        federated=args.federated, fanout=args.fanout, ckpt=args.ckpt,
+        queue=args.queue, prefill_chunk=args.prefill_chunk)
     print("corpus coverage per node:\n", np.round(cov, 2), flush=True)
     if args.federated:
         fed = nodes[0].federation
@@ -207,8 +218,11 @@ def main():
         if args.federated:
             extra += (f", {st.remote_contexts} remote ctx "
                       f"({st.remote_gold} gold)")
+        rounds = "frames" if args.queue == "continuous" else "waves"
+        if args.queue == "continuous":
+            extra += f", {st.refills} refills"
         print(f"  node {node.node_id} [{node.arch}]: {st.queries} queries "
-              f"in {st.waves} waves, {st.tokens_out} tokens, "
+              f"in {st.waves} {rounds}, {st.tokens_out} tokens, "
               f"{st.drops} drops, {st.queries_per_s:.1f} q/s measured"
               + extra)
     if args.federated:

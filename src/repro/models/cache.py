@@ -113,6 +113,47 @@ def put_cycle(stacked, new_slice, cycle: jax.Array):
         stacked, new_slice)
 
 
+def _row_leaves(cache: dict):
+    """The per-row pytrees of a cache: slot/enc stacks carry batch on
+    axis 1 ([nc, B, ...]); ``first`` carries it on axis 0."""
+    trees = {"slots": (cache["slots"], 1), "first": (cache["first"], 0)}
+    if "enc" in cache:
+        trees["enc"] = (cache["enc"], 1)
+    return trees
+
+
+def extract_row(cache: dict, row: jax.Array) -> dict:
+    """Slice batch row ``row`` out of a cache (keeping a size-1 batch
+    dim), e.g. to inspect or park one sequence's state.  ``length`` is
+    shared across rows and copied as-is."""
+    out = dict(cache)
+    for name, (tree, axis) in _row_leaves(cache).items():
+        out[name] = jax.tree.map(
+            lambda a: jax.lax.dynamic_slice_in_dim(a, row, 1, axis=axis),
+            tree)
+    return out
+
+
+def insert_row(dst: dict, src: dict, src_row: jax.Array,
+               dst_row: jax.Array) -> dict:
+    """Copy batch row ``src_row`` of ``src`` into row ``dst_row`` of
+    ``dst`` across every per-row leaf (KV buffers, recurrent states,
+    enc cross-attn K/V, ``first``) — the per-slot cache swap behind
+    continuous-batching refill.  ``dst.length`` is kept: caller must
+    ensure both caches sit at the same absolute position.  In-place
+    when ``dst`` is donated at the jit boundary."""
+    out = dict(dst)
+    for name, (_, axis) in _row_leaves(dst).items():
+
+        def put(d, s, axis=axis):
+            row = jax.lax.dynamic_slice_in_dim(s, src_row, 1, axis=axis)
+            return jax.lax.dynamic_update_slice_in_dim(
+                d, row.astype(d.dtype), dst_row, axis=axis)
+
+        out[name] = jax.tree.map(put, dst[name], src[name])
+    return out
+
+
 def write_seq(kv_cache: dict, k: jax.Array, v: jax.Array,
               start: jax.Array, cycle: jax.Array) -> dict:
     """Write a [B,S,KV,hd] prefill segment at absolute position ``start``

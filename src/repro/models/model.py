@@ -182,8 +182,49 @@ class Model:
 
     # ---------------------------------------------------------- block bodies
 
+    def _buffer_positions(self, kv_pos, batch, first, pos_shift):
+        """Broadcast per-slot buffer positions to [B, L] and translate
+        them into the query frame: with ``pos_shift`` (continuous
+        batching) positions become per-row relative — slots before the
+        row's first token go negative, i.e. invalid — otherwise slots
+        left of ``first`` are masked to -1."""
+        L_buf = kv_pos.shape[-1]
+        kv_pos = jnp.broadcast_to(kv_pos, (batch, L_buf))
+        if pos_shift is not None:
+            return kv_pos - pos_shift[:, None]
+        if first is not None:       # mask left-padding slots
+            return jnp.where(kv_pos >= first[:, None], kv_pos, -1)
+        return kv_pos
+
+    def _cached_seq_attention(self, q, k, v, kv_stack, cycle, start, qpos,
+                              window, first, pos_shift):
+        """Chunk-mode attention: the segment's queries attend to (cached
+        past ⊕ current segment), then the segment's K/V are persisted —
+        so a prompt is absorbed through one static [B, C] program C
+        tokens at a time.  Returns (attn, new_kv_stack)."""
+        cfg = self.cfg
+        k_buf, v_buf = _capped_cycle_slice(kv_stack, cycle, None)
+        B, L_buf = k_buf.shape[0], k_buf.shape[1]
+        if window is not None and L_buf == window:
+            past = cache_lib.rolling_kv_positions(start, L_buf)
+        else:
+            past = cache_lib.full_kv_positions(start, L_buf)
+        past = self._buffer_positions(past, B, first, pos_shift)
+        k_all = jnp.concatenate([k_buf, k.astype(k_buf.dtype)], axis=1)
+        v_all = jnp.concatenate([v_buf, v.astype(v_buf.dtype)], axis=1)
+        kv_pos = jnp.concatenate([past, qpos], axis=1)
+        S = q.shape[1]
+        a = L.flash_attention(q, k_all, v_all, qpos, kv_pos, causal=True,
+                              window=window,
+                              softcap=cfg.attn_logit_softcap,
+                              q_block=min(512, S),
+                              kv_block=min(512, L_buf + S))
+        new_kv = cache_lib.write_seq(kv_stack, k, v, start, cycle)
+        return a, new_kv
+
     def _attn_sublayer(self, p, x, kind, qpos, kpos, angles, kv_stack, mode,
-                       start, cycle, first=None, kv_cap=None):
+                       start, cycle, first=None, kv_cap=None,
+                       pos_shift=None):
         """Self-attention sublayer.  ``kv_stack`` holds the cycle-stacked
         KV buffers ([nc,B,L,KV,hd] leaves); writes land in cycle
         ``cycle``.  Returns (delta_x, new_kv_stack)."""
@@ -203,12 +244,15 @@ class Model:
                 kv_pos = cache_lib.rolling_kv_positions(start + 1, L_buf)
             else:
                 kv_pos = cache_lib.full_kv_positions(start + 1, L_buf)
-            kv_pos = jnp.broadcast_to(kv_pos, (x.shape[0], L_buf))
-            if first is not None:   # mask left-padding slots
-                kv_pos = jnp.where(kv_pos >= first[:, None], kv_pos, -1)
+            kv_pos = self._buffer_positions(kv_pos, x.shape[0], first,
+                                            pos_shift)
             a = L.decode_attention(q, k_buf, v_buf,
                                    qpos[:, 0], kv_pos,
                                    window=window, softcap=cfg.attn_logit_softcap)
+        elif mode == "chunk":
+            a, new_kv = self._cached_seq_attention(
+                q, k, v, kv_stack, cycle, start, qpos, window, first,
+                pos_shift)
         else:
             S = x.shape[1]
             a = L.flash_attention(
@@ -276,7 +320,7 @@ class Model:
             da, new_kv = self._attn_sublayer(
                 p, x, kind, ctx["qpos"], ctx["kpos"], ctx["angles"],
                 cache_stack, mode, ctx["start"], cyc, ctx.get("first"),
-                ctx.get("kv_cap"))
+                ctx.get("kv_cap"), ctx.get("pos_shift"))
             # checkpoint_name lets the remat policy SAVE this psum
             # output instead of re-all-reducing it in the backward
             # recompute (§Perf iteration 4)
@@ -293,18 +337,24 @@ class Model:
                 k_buf, v_buf = _capped_cycle_slice(new_kv, cyc,
                                                    ctx.get("kv_cap"))
                 W = k_buf.shape[1]
-                kv_pos = jnp.broadcast_to(
+                kv_pos = self._buffer_positions(
                     cache_lib.rolling_kv_positions(ctx["start"] + 1, W),
-                    (x.shape[0], W))
-                if ctx.get("first") is not None:
-                    kv_pos = jnp.where(kv_pos >= ctx["first"][:, None],
-                                       kv_pos, -1)
+                    x.shape[0], ctx.get("first"), ctx.get("pos_shift"))
                 a = L.decode_attention(q, k_buf, v_buf,
                                        ctx["qpos"][:, 0], kv_pos,
                                        window=cfg.sliding_window)
                 mo, mstate = ssm.mamba_step(
                     p["mamba"], h, cfg,
                     cache_lib.take_cycle(cache_stack["mamba"], cyc))
+            elif mode == "chunk":
+                a, new_kv = self._cached_seq_attention(
+                    q, k, v, kv, cyc, ctx["start"], ctx["qpos"],
+                    cfg.sliding_window, ctx.get("first"),
+                    ctx.get("pos_shift"))
+                mo, mstate = ssm.mamba_forward(
+                    p["mamba"], h, cfg,
+                    cache_lib.take_cycle(cache_stack["mamba"], cyc),
+                    mask=ctx.get("seq_mask"))
             else:
                 S = x.shape[1]
                 a = L.flash_attention(q, k, v, ctx["qpos"], ctx["kpos"],
@@ -337,7 +387,8 @@ class Model:
             if mode == "decode":
                 y, st = step(p["cell"], h, cfg, state)
             else:
-                y, st = fwd(p["cell"], h, cfg, state)
+                y, st = fwd(p["cell"], h, cfg, state,
+                            mask=ctx.get("seq_mask"))
             x = x + y
             if cache_stack is not None:
                 new_stack = cache_lib.put_cycle(cache_stack, st, cyc)
@@ -491,21 +542,75 @@ class Model:
         cache["length"] = cache["length"] + S
         return self._logits(params, x[:, -1]), cache
 
+    def prefill_chunk(self, params, batch: dict, cache: dict
+                      ) -> Tuple[jax.Array, dict]:
+        """Absorb one fixed-size prompt chunk into the cache.
+
+        Like ``prefill`` but (a) queries attend to ALL cached K/V —
+        earlier chunks included — so a prompt runs through one static
+        [B, C] program C tokens at a time, (b) recurrent state updates
+        are masked at pad positions (left-padding to a chunk multiple is
+        numerically exact), and (c) ``batch["positions"]`` are per-row
+        *relative* — counted from the row's first real token
+        (``cache["first"]``), -1 at pads — while cache slots stay keyed
+        by the shared absolute ``cache["length"]``, so RoPE / learned
+        position embeddings match an unpadded solo run regardless of
+        where in a shared frame the row starts.  Returns
+        (last-position logits [B,V], cache).
+
+        Known redundancy: encoder-decoder configs re-run the encoder
+        per chunk (enc K/V are rewritten idempotently) — a static
+        first-chunk flag would double the compile count, and the
+        serving path feeds zero frames, so the repeated pass is cheap;
+        revisit if real audio frames ever reach continuous serving."""
+        cfg = self.cfg
+        if cfg.pos_embedding == "sinusoidal":
+            raise NotImplementedError(
+                "sinusoidal embeddings ignore the chunk offset; chunked "
+                "prefill is unsupported for pos_embedding='sinusoidal'")
+        tokens, positions = batch["tokens"], batch["positions"]
+        x = self._embed(params, tokens, positions,
+                        batch.get("vision_embeds"))
+        S = x.shape[1]
+        pos2d = positions if positions.ndim == 2 else positions[0]
+        ctx = {
+            "qpos": pos2d, "kpos": pos2d,
+            "angles": self._angles(positions, S),
+            "start": cache["length"],
+            "pos_shift": cache["first"],
+            "seq_mask": pos2d >= 0,
+        }
+        if cfg.is_encoder_decoder:
+            ctx["enc_out"] = self.encode(params, batch["encoder_frames"])
+        x, aux, cache = self._run_stack(params, x, ctx, cache, "chunk")
+        cache["length"] = cache["length"] + S
+        return self._logits(params, x[:, -1]), cache
+
     def decode_step(self, params, token: jax.Array, cache: dict,
-                    kv_cap: Optional[int] = None) -> Tuple[jax.Array, dict]:
+                    kv_cap: Optional[int] = None, relative: bool = False
+                    ) -> Tuple[jax.Array, dict]:
         """token: [B,1] int32. One serve_step: logits for the next token.
 
         ``kv_cap`` (static) bounds the decode-side KV *read* when the
         caller knows positions never reach past it (the serving loop
         passes prompt_bucket + max_new_tokens): slots at index >= cap
         are always masked, so dropping them is exact while making the
-        per-step read O(live context) instead of O(max_len)."""
+        per-step read O(live context) instead of O(max_len).
+
+        ``relative`` (static) switches positions to the per-row frame of
+        ``prefill_chunk``: each row's position is its live token count
+        (``length - first[row]``), and buffer slots before the row's
+        first token go negative (invalid) instead of being masked by
+        ``first`` — the continuous-batching decode mode."""
         cfg = self.cfg
         B = token.shape[0]
         pos_scalar = cache["length"]
-        pos = jnp.broadcast_to(pos_scalar, (B, 1)).astype(jnp.int32)
+        if relative:
+            pos = (pos_scalar - cache["first"])[:, None].astype(jnp.int32)
+        else:
+            pos = jnp.broadcast_to(pos_scalar, (B, 1)).astype(jnp.int32)
         if cfg.use_mrope:
-            positions = jnp.broadcast_to(pos_scalar, (3, B, 1)).astype(jnp.int32)
+            positions = jnp.broadcast_to(pos, (3, B, 1))
         else:
             positions = pos
         x = self._embed(params, token, positions)
@@ -513,7 +618,8 @@ class Model:
             "qpos": pos, "kpos": None,
             "angles": self._angles(positions, 1),
             "start": pos_scalar,
-            "first": cache.get("first"),
+            "first": None if relative else cache.get("first"),
+            "pos_shift": cache["first"] if relative else None,
             "kv_cap": kv_cap,
         }
         x, _, cache = self._run_stack(params, x, ctx, cache, "decode")

@@ -81,13 +81,22 @@ def _mamba_ssm_params(params, cfg: ModelConfig, xc: jax.Array):
 
 
 def mamba_forward(params, x: jax.Array, cfg: ModelConfig,
-                  state: Optional[dict] = None) -> Tuple[jax.Array, dict]:
-    """x: [B,S,D] -> (y [B,S,D], state {h, conv})."""
+                  state: Optional[dict] = None,
+                  mask: Optional[jax.Array] = None) -> Tuple[jax.Array, dict]:
+    """x: [B,S,D] -> (y [B,S,D], state {h, conv}).
+
+    ``mask`` ([B,S] bool, True = real token) makes left-pad positions an
+    exact identity: their conv input is zeroed (matching the zero
+    left-pad of the causal conv) and the SSM state passes through
+    unchanged, so a left-padded batch carries the same final state as
+    the unpadded prompts (chunked-prefill invariant)."""
     B, S, _ = x.shape
     inner = mamba_inner_dim(cfg)
     nstate = cfg.ssm.state_size
     xz = x @ params["in_proj"]
     xi, z = jnp.split(xz, 2, axis=-1)
+    if mask is not None:
+        xi = jnp.where(mask[..., None], xi, 0)
     if state is not None:
         # prepend conv history (decode-continuation prefill)
         xi_ext = jnp.concatenate([state["conv"].astype(xi.dtype), xi], axis=1)
@@ -109,20 +118,20 @@ def mamba_forward(params, x: jax.Array, cfg: ModelConfig,
         return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
     dt_p, B_p, C_p = padseq(dt), padseq(Bm), padseq(Cm)
     xc_p = padseq(xc.astype(jnp.float32))
-    valid = jnp.pad(jnp.ones((S,), bool), (0, pad))
+    valid = jnp.ones((B, S), bool) if mask is None else mask
+    valid = jnp.pad(valid, ((0, 0), (0, pad)))        # [B, S+pad]
     nch = (S + pad) // chunk
     # time-major chunks: [nch, chunk, B, ...]
     tm = lambda a: a.reshape((a.shape[0], nch, chunk) + a.shape[2:]) \
         .transpose((1, 2, 0) + tuple(range(3, a.ndim + 1)))
-    xs = (tm(dt_p), tm(B_p), tm(C_p), tm(xc_p),
-          valid.reshape(nch, chunk))
+    xs = (tm(dt_p), tm(B_p), tm(C_p), tm(xc_p), tm(valid))
 
     def step(h, t_xs):
-        dt_t, B_t, C_t, x_t, m_t = t_xs
+        dt_t, B_t, C_t, x_t, m_t = t_xs               # m_t: [B]
         dA = jnp.exp(dt_t[..., None] * A)             # [B,inner,state]
         dBx = dt_t[..., None] * B_t[:, None, :] * x_t[..., None]
         h_new = h * dA + dBx
-        h = jnp.where(m_t, h_new, h)
+        h = jnp.where(m_t[:, None, None], h_new, h)
         y = jnp.einsum("bis,bs->bi", h, C_t) + params["D"] * x_t
         return h, y
 
@@ -224,11 +233,23 @@ def _mlstm_cell(C, n, m, q_t, k_t, v_t, li_t, lf_t):
     return C, n, m_new, num / den[..., None]
 
 
+def _mask_gates(li, lf, mask):
+    """Identity gates at masked positions: log_i=-inf (no insert),
+    log_f=0 (no decay) — the carried state passes through untouched, so
+    left-padding a prompt is numerically exact."""
+    li = jnp.where(mask, li, -1e30)
+    lf = jnp.where(mask, lf, 0.0)
+    return li, lf
+
+
 def mlstm_forward(params, x: jax.Array, cfg: ModelConfig,
-                  state: Optional[dict] = None) -> Tuple[jax.Array, dict]:
+                  state: Optional[dict] = None,
+                  mask: Optional[jax.Array] = None) -> Tuple[jax.Array, dict]:
     B, S, _ = x.shape
     st = state or mlstm_init_state(cfg, B)
     q, k, v, li, lf = _mlstm_qkvif(params, x, cfg)
+    if mask is not None:
+        li, lf = _mask_gates(li, lf, mask[..., None])
 
     def step(carry, t):
         C, n, m = carry
@@ -245,16 +266,23 @@ def mlstm_forward(params, x: jax.Array, cfg: ModelConfig,
 
 def mlstm_forward_chunked(params, x: jax.Array, cfg: ModelConfig,
                           state: Optional[dict] = None,
-                          chunk: int = 128) -> Tuple[jax.Array, dict]:
+                          chunk: int = 128,
+                          mask: Optional[jax.Array] = None
+                          ) -> Tuple[jax.Array, dict]:
     """Chunkwise-parallel mLSTM: within-chunk attention-like matmuls +
     cross-chunk recurrent state.  Mathematically equal to mlstm_forward
     (same stabilized exponential gating), but MXU-friendly.
+
+    ``mask`` ([B,S] bool) applies identity gates at padded positions so
+    a left-padded batch is exact (see ``_mask_gates``).
     """
     B, S, _ = x.shape
     H, hd = cfg.num_heads, cfg.resolved_head_dim
     pad = (-S) % chunk
     st = state or mlstm_init_state(cfg, B)
     q, k, v, li, lf = _mlstm_qkvif(params, x, cfg)
+    if mask is not None:
+        li, lf = _mask_gates(li, lf, mask[..., None])
     if pad:
         # identity gates on padding: log_f=0 (no decay), log_i=-inf (no
         # insert) so the carried state is untouched by pad steps.
@@ -365,7 +393,10 @@ def _slstm_cell(params, pre, state):
 
 
 def slstm_forward(params, x: jax.Array, cfg: ModelConfig,
-                  state: Optional[dict] = None) -> Tuple[jax.Array, dict]:
+                  state: Optional[dict] = None,
+                  mask: Optional[jax.Array] = None) -> Tuple[jax.Array, dict]:
+    """``mask`` ([B,S] bool, True = real token): masked steps carry the
+    state through unchanged, so left-padding is numerically exact."""
     B, S, _ = x.shape
     st = state or slstm_init_state(cfg, B)
     pre = x @ params["w"]                              # [B,S,4d]
@@ -375,15 +406,17 @@ def slstm_forward(params, x: jax.Array, cfg: ModelConfig,
     chunk = min(128, S)
     pad = (-S) % chunk
     pre_p = jnp.pad(pre, ((0, 0), (0, pad), (0, 0)))
-    valid = jnp.pad(jnp.ones((S,), bool), (0, pad))
+    valid = jnp.ones((B, S), bool) if mask is None else mask
+    valid = jnp.pad(valid, ((0, 0), (0, pad)))        # [B, S+pad]
     nch = (S + pad) // chunk
     pre_tm = pre_p.reshape(B, nch, chunk, -1).transpose(1, 2, 0, 3)
-    xs = (pre_tm, valid.reshape(nch, chunk))
+    xs = (pre_tm, valid.reshape(B, nch, chunk).transpose(1, 2, 0))
 
     def step(carry, t_xs):
-        pre_t, m_t = t_xs
+        pre_t, m_t = t_xs                              # m_t: [B]
         new = _slstm_cell(params, pre_t, carry)
-        new = jax.tree.map(lambda a, b: jnp.where(m_t, a, b), new, carry)
+        new = jax.tree.map(lambda a, b: jnp.where(m_t[:, None], a, b),
+                           new, carry)
         return new, new["h"]
 
     def chunk_step(carry, c_xs):

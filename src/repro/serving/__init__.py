@@ -1,10 +1,17 @@
-"""Serving stack: compiled-decode engine, sampling params, request queue.
+"""Serving stack: compiled-decode engine, sampling params, and two
+request schedulers — synchronous ``RequestQueue`` waves and
+``ContinuousQueue`` continuous batching (chunked prefill + per-slot
+refill, for engines built with ``prefill_chunk=``).
 
     from repro.serving import ServeEngine, GenerationParams, RequestQueue
+    from repro.serving import ContinuousQueue
 """
-from repro.serving.engine import ServeEngine
+from repro.serving.engine import ContinuousSession, ServeEngine
 from repro.serving.sampling import GenerationParams, sample_token
-from repro.serving.scheduler import Completion, QueueStats, RequestQueue
+from repro.serving.scheduler import (Completion, ContinuousCompletion,
+                                     ContinuousQueue, ContinuousStats,
+                                     QueueStats, RequestQueue)
 
-__all__ = ["ServeEngine", "GenerationParams", "sample_token",
-           "Completion", "QueueStats", "RequestQueue"]
+__all__ = ["ServeEngine", "ContinuousSession", "GenerationParams",
+           "sample_token", "Completion", "QueueStats", "RequestQueue",
+           "ContinuousCompletion", "ContinuousQueue", "ContinuousStats"]

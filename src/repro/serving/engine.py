@@ -29,17 +29,28 @@ would recompile the decode loop per length).
 
 ``generate_reference`` keeps the original per-token Python loop (one
 host sync per token) for parity tests and the throughput benchmark.
+
+Continuous batching (``prefill_chunk`` set): prompts are absorbed C
+tokens at a time through one static [B, C] chunked-prefill program
+(``Model.prefill_chunk``) instead of a per-bucket/per-length fused
+prefill — killing the per-exact-prompt-length recompile on recurrent
+architectures — and ``ContinuousSession`` refills individual decode
+slots the moment a row finishes (EOS / budget) by prefilling the next
+request into a single-row staging cache and swapping it in with
+``cache.insert_row``, instead of waiting for the whole wave.  See
+docs/ARCHITECTURE.md ("Continuous batching").
 """
 from __future__ import annotations
 
 import warnings
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.models import cache as cache_lib
 from repro.models.model import Model
 from repro.serving.sampling import GenerationParams, sample_token
 
@@ -50,7 +61,8 @@ _MIN_BUCKET = 8
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
                  batch_size: int = 8, pad_id: int = 0,
-                 moe_capacity_factor: Optional[float] = None):
+                 moe_capacity_factor: Optional[float] = None,
+                 prefill_chunk: Optional[int] = None):
         cf = moe_capacity_factor
         if cf is None and cfg.moe is not None:
             cf = float(cfg.moe.num_experts)   # dropless at serving sizes
@@ -67,12 +79,35 @@ class ServeEngine:
         # dynamic_update_slice ops on the (scan/while_loop) carry, so XLA
         # updates the buffers in place — no decode-step cache copy
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,),
-                               static_argnames=("kv_cap",))
+                               static_argnames=("kv_cap", "relative"))
         self._prefill_sample = jax.jit(self._prefill_sample_impl,
                                        static_argnames=("gp",))
         self._decode_loop = jax.jit(self._decode_loop_impl,
                                     static_argnames=("gp", "kv_cap"),
                                     donate_argnums=(2,))
+        # continuous-batching programs (chunked prefill + refillable
+        # decode); compiled shapes: [B, C] frame chunks, [1, C] staging
+        # chunks, and the segment loop per (gp, pow2 kv_cap)
+        self.prefill_chunk = prefill_chunk
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError(f"prefill_chunk={prefill_chunk} must be "
+                                 f">= 1")
+            if cfg.pos_embedding == "sinusoidal":
+                raise ValueError("chunked prefill is unsupported for "
+                                 "pos_embedding='sinusoidal' (the table "
+                                 "ignores the chunk offset)")
+            self._prefill_chunk = jax.jit(self._prefill_chunk_impl,
+                                          donate_argnums=(2,))
+            self._decode_cont = jax.jit(self._decode_cont_impl,
+                                        static_argnames=("gp", "kv_cap"),
+                                        donate_argnums=(2, 4, 5, 6, 7))
+            # one fused dispatch per mid-frame refill: staging cache +
+            # chunk scan + first-token sample + row swap + carry updates
+            self._refill = jax.jit(self._refill_impl,
+                                   static_argnames=("gp",),
+                                   donate_argnums=(2, 3, 4, 5, 6))
+            self._fresh_cache = jax.jit(self._fresh_cache_impl)
 
     # ---------------------------------------------------------------- batching
 
@@ -195,6 +230,155 @@ class ServeEngine:
         _, _, cache, _, out, count = jax.lax.while_loop(cond, body, state)
         return out, count, cache
 
+    # -------------------------------------------- continuous-batching programs
+
+    def _fresh_cache_impl(self, first, length0):
+        """A zeroed cache positioned at ``length0`` with per-row first
+        valid positions ``first`` — the frame (batch) or staging
+        (single-row) cache of a continuous session."""
+        cache = self.model.init_cache(first.shape[0], self.max_len,
+                                      jnp.float32)
+        cache["first"] = first.astype(jnp.int32)
+        cache["length"] = jnp.asarray(length0, jnp.int32)
+        return cache
+
+    def _chunk_step(self, params, toks, cache):
+        """One [B, C] chunk of the chunked prefill: derive per-row
+        RELATIVE positions (counted from ``cache['first']``, -1 at pads)
+        at the cache's current absolute offset, then
+        ``Model.prefill_chunk``.  The offset is traced, so every chunk
+        of every prompt length reuses one compiled program per batch
+        shape."""
+        B, C = toks.shape
+        first = cache["first"]
+        abs_pos = cache["length"] + jnp.arange(C, dtype=jnp.int32)[None, :]
+        pos = jnp.where(abs_pos >= first[:, None],
+                        abs_pos - first[:, None], -1)
+        if self.cfg.use_mrope:
+            pos = jnp.broadcast_to(pos, (3, B, C))
+        batch = {"tokens": toks, "positions": pos}
+        if self.cfg.is_encoder_decoder:
+            batch["encoder_frames"] = jnp.zeros(
+                (B, self.cfg.encoder_seq_len, self.cfg.d_model),
+                jnp.float32)
+        return self.model.prefill_chunk(params, batch, cache)
+
+    def _prefill_chunk_impl(self, params, toks, cache):
+        return self._chunk_step(params, toks, cache)
+
+    def _refill_impl(self, params, toks, tok, cache, done, remaining, idx,
+                     slot, p_len, budget, key, gp: GenerationParams):
+        """Fused mid-frame refill — ONE dispatch per slot swap: chunk-
+        prefill ``toks`` ([1, k*C], left-padded) into a fresh staging
+        cache whose frames end at the live cache's position, sample the
+        row's first token, ``insert_row`` the staging state into
+        ``slot``, and flip the slot's decode carry (done / remaining /
+        idx) live.  Compiled once per chunk count k."""
+        C = self.prefill_chunk
+        k = toks.shape[1] // C
+        d = cache["length"]
+        staging = self._fresh_cache_impl((d - p_len)[None],
+                                         d - toks.shape[1])
+
+        def chunk(carry, j):
+            _, stg = carry
+            tc = jax.lax.dynamic_slice_in_dim(toks, j * C, C, axis=1)
+            logits, stg = self._chunk_step(params, tc, stg)
+            return (logits.astype(jnp.float32), stg), None
+
+        logits0 = jnp.zeros((1, self.cfg.vocab_size), jnp.float32)
+        (logits, staging), _ = jax.lax.scan(chunk, (logits0, staging),
+                                            jnp.arange(k))
+        tok_new = sample_token(logits, gp, key, 0)
+        cache = cache_lib.insert_row(cache, staging, jnp.int32(0), slot)
+        tok = jax.lax.dynamic_update_slice(tok, tok_new, (slot, 0))
+        done = jax.lax.dynamic_update_slice(
+            done, jnp.zeros((1,), done.dtype), (slot,))
+        remaining = jax.lax.dynamic_update_slice(
+            remaining, budget[None].astype(remaining.dtype), (slot,))
+        idx = jax.lax.dynamic_update_slice(
+            idx, jnp.zeros((1,), idx.dtype), (slot,))
+        return tok, cache, done, remaining, idx
+
+    def _decode_cont_impl(self, params, tok, cache, key, done, remaining,
+                          idx, out, t0, drain, gp: GenerationParams,
+                          kv_cap=None):
+        """Continuous decode segment: like ``_decode_loop_impl`` but
+        with per-row ``remaining`` budgets and per-row output cursors
+        ``idx``, exiting as soon as any row that was live at entry
+        finishes (budget exhausted / EOS) so the host can swap the freed
+        slot's cache state for the next request.  ``drain`` (traced
+        bool) disables the per-completion exit — used when nothing is
+        pending, so the frame finishes in one dispatch.  Rows decode at
+        per-row relative positions (``Model.decode_step(relative=True)``).
+        Returns (tok, done, remaining, idx, out, cache, summary) where
+        ``summary`` packs [done, idx, t, length] into one int32 array —
+        the only device->host transfer a segment needs."""
+        max_new = gp.max_new_tokens
+        done0 = done
+        state = (jnp.asarray(t0, jnp.int32), tok, cache, done, remaining,
+                 idx, out)
+
+        def cond(st):
+            _, _, _, done, _, _, _ = st
+            return ~jnp.all(done) & (drain | ~jnp.any(done & ~done0))
+
+        def body(st):
+            t, tok, cache, done, remaining, idx, out = st
+            active = ~done
+            col = jnp.where(active, tok[:, 0], 0)
+            hit = active[:, None] & (jnp.arange(max_new)[None, :]
+                                     == idx[:, None])
+            out = jnp.where(hit, col[:, None], out)
+            idx = idx + active.astype(jnp.int32)
+            remaining = remaining - active.astype(jnp.int32)
+            done = done | (remaining <= 0)
+            if gp.eos_id is not None:
+                done = done | (active & (tok[:, 0] == gp.eos_id))
+
+            def step(args):
+                tok, cache = args
+                logits, cache = self.model.decode_step(
+                    params, tok, cache, kv_cap=kv_cap, relative=True)
+                return sample_token(logits, gp, key, t + 1), cache
+
+            # survivors must leave the segment holding an un-recorded
+            # token, so the step also runs on the iteration that ends
+            # the segment; it is skipped only when nothing is live
+            tok, cache = jax.lax.cond(~jnp.all(done), step,
+                                      lambda args: args, (tok, cache))
+            return (t + 1, tok, cache, done, remaining, idx, out)
+
+        t, tok, cache, done, remaining, idx, out = jax.lax.while_loop(
+            cond, body, state)
+        summary = jnp.concatenate(
+            [done.astype(jnp.int32), idx,
+             jnp.stack([t, cache["length"]])])
+        return tok, done, remaining, idx, out, cache, summary
+
+    def cont_max_prompt_len(self, max_new_tokens: int) -> int:
+        """Longest prompt a continuous session can serve: its chunk
+        frames (``ceil(p/C)*C`` slots) plus the decode budget must fit
+        the preallocated cache."""
+        assert self.prefill_chunk is not None
+        return max(0, self.max_len - max_new_tokens) \
+            // self.prefill_chunk * self.prefill_chunk
+
+    def _cont_kv_cap(self, high: int) -> Optional[int]:
+        """Static decode-read cap for a continuous segment: the highest
+        position the segment can reach, rounded up to 32 slots (the
+        capped KV read is memcpy-bound, so a tight cap is the decode
+        step's dominant cost knob; 32-granularity bounds distinct
+        compiles at max_len/32 per GenerationParams)."""
+        if self._exact_length:
+            return None
+        cap = -(-min(self.max_len, high) // 32) * 32
+        return min(self.max_len, max(cap, _MIN_BUCKET))
+
+    def continuous_session(self, gen: GenerationParams,
+                           key=None) -> "ContinuousSession":
+        return ContinuousSession(self, gen, key=key)
+
     def _route_empty_prompts(self, prompts, gen: GenerationParams, key,
                              generate_fn) -> Optional[List[List[int]]]:
         """Empty prompts condition on nothing, so they get empty
@@ -302,3 +486,191 @@ class ServeEngine:
                                          kv_cap=kv_cap)
             tok = sample_token(logits, gen, key, t + 1)
         return outs[:len(prompts)]
+
+
+class ContinuousSession:
+    """Host-side state machine for continuous batching on one engine.
+
+    A session serves a stream of requests through *frames*: a frame
+    starts by chunk-prefilling up to ``batch_size`` prompts together
+    (left-padded to a shared multiple of ``prefill_chunk``), then runs
+    compiled decode segments that return to the host whenever a row
+    finishes.  The host swaps the freed slot's cache state for the next
+    pending request — chunk-prefilled into a single-row staging cache
+    whose frames end exactly at the shared absolute position, then
+    ``insert_row``-ed into the live cache — and resumes the loop.  When
+    the frame's positions near ``max_len`` (or nothing pending fits),
+    finished slots idle until the frame drains and a fresh frame starts.
+
+    All positions handed to the model are per-row relative, so a
+    request's numerics match a solo run regardless of the admission
+    offset; slots/buffers stay keyed by the shared absolute position.
+    Scheduling policy (which request enters which slot) lives in
+    ``serving.scheduler.ContinuousQueue``; this class only enforces
+    geometry (``can_refill``) and runs the device programs.
+    """
+
+    def __init__(self, engine: ServeEngine, gen: GenerationParams, *,
+                 key=None):
+        if engine.prefill_chunk is None:
+            raise ValueError("engine was built without prefill_chunk=..., "
+                             "which continuous batching requires")
+        if gen.max_new_tokens < 1:
+            raise ValueError("continuous batching needs max_new_tokens >= 1")
+        if engine.cont_max_prompt_len(gen.max_new_tokens) < 1:
+            raise ValueError(
+                f"prefill_chunk={engine.prefill_chunk} + "
+                f"max_new_tokens={gen.max_new_tokens} do not fit the "
+                f"engine cache (max_len={engine.max_len})")
+        self.eng = engine
+        self.gen = gen
+        self.C = engine.prefill_chunk
+        self.B = engine.batch_size
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        # device-resident decode carry (rebound after every dispatch —
+        # the compiled programs consume their donated inputs)
+        self.cache = None
+        self.tok = None                        # [B, 1]
+        self.out = None                        # [B, max_new]
+        self._done_d = None                    # [B] bool
+        self._rem_d = None                     # [B] int32
+        self._idx_d = None                     # [B] int32
+        self._seg_key = None
+        # host mirrors (updated from the segment summary / refill args)
+        self.done = np.ones(self.B, bool)
+        self.idx = np.zeros(self.B, np.int32)
+        self._budget = np.zeros(self.B, np.int32)
+        self.length = 0                        # mirrors cache["length"]
+        self.tstep = 0
+        self.admitted = 0
+        self.frames = 0
+        self.segments = 0
+        self.refills = 0
+
+    # ------------------------------------------------------------- geometry
+
+    def _padded(self, prompt_len: int) -> int:
+        return -(-max(1, prompt_len) // self.C) * self.C
+
+    def free_slots(self) -> List[int]:
+        return [i for i in range(self.B) if self.done[i]]
+
+    def active(self) -> bool:
+        return bool((~self.done).any())
+
+    def can_refill(self, prompt_len: int, budget: int) -> bool:
+        """A request fits mid-frame iff its padded chunk frames fit
+        *below* the current shared position (its tokens occupy
+        [length - p, length)) and its decode budget fits above."""
+        return (self.cache is not None
+                and self._padded(prompt_len) <= self.length
+                and self.length + budget <= self.eng.max_len)
+
+    # ------------------------------------------------------------ admission
+
+    def _chunked_prefill(self, cache, toks: np.ndarray):
+        logits = None
+        for j in range(toks.shape[1] // self.C):
+            logits, cache = self.eng._prefill_chunk(
+                self.eng.params,
+                jnp.asarray(toks[:, j * self.C:(j + 1) * self.C]), cache)
+        return logits, cache
+
+    def begin_frame(self, prompts: Sequence[Sequence[int]],
+                    budgets: Sequence[int]) -> None:
+        """Drop the previous frame and admit up to ``batch_size``
+        prompts at position 0 through the shared [B, C] chunk program."""
+        assert prompts and len(prompts) <= self.B
+        assert all(len(p) for p in prompts) and not self.active()
+        frame_len = self._padded(max(len(p) for p in prompts))
+        toks = np.full((self.B, frame_len), self.eng.pad_id, np.int32)
+        first = np.full((self.B,), frame_len, np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, frame_len - len(p):] = p
+            first[i] = frame_len - len(p)
+        cache = self.eng._fresh_cache(jnp.asarray(first),
+                                      jnp.zeros((), jnp.int32))
+        logits, self.cache = self._chunked_prefill(cache, toks)
+        self.tok = sample_token(logits, self.gen,
+                                jax.random.fold_in(self.key, self.frames),
+                                0)
+        self.out = jnp.zeros((self.B, self.gen.max_new_tokens), jnp.int32)
+        self.done = np.arange(self.B) >= len(prompts)
+        self.idx = np.zeros(self.B, np.int32)
+        remaining = np.zeros(self.B, np.int32)
+        remaining[:len(prompts)] = budgets
+        self._budget = remaining.copy()
+        self._done_d = jnp.asarray(self.done)
+        self._rem_d = jnp.asarray(remaining)
+        self._idx_d = jnp.asarray(self.idx)
+        self._seg_key = jax.random.fold_in(self.key, 500 + self.frames)
+        self.length = frame_len
+        self.tstep = 0
+        self.admitted += len(prompts)
+        self.frames += 1
+        # sync: dispatch is async, but "the frame's first tokens exist"
+        # is the semantic moment callers stamp TTFT at
+        jax.block_until_ready(self.tok)
+
+    def refill(self, slot: int, prompt: Sequence[int], budget: int) -> None:
+        """Swap ``prompt`` into finished slot ``slot`` mid-frame — one
+        fused dispatch (``ServeEngine._refill``): staging chunk prefill
+        ending at the current shared position, first-token sample, row
+        insert, live carry update.  The slot resumes decoding with the
+        next segment."""
+        p = len(prompt)
+        assert self.done[slot] and self.can_refill(p, budget), \
+            (slot, p, budget, self.length)
+        padded = self._padded(p)
+        toks = np.full((1, padded), self.eng.pad_id, np.int32)
+        toks[0, padded - p:] = list(prompt)
+        self.admitted += 1
+        (self.tok, self.cache, self._done_d, self._rem_d,
+         self._idx_d) = self.eng._refill(
+            self.eng.params, jnp.asarray(toks), self.tok, self.cache,
+            self._done_d, self._rem_d, self._idx_d, jnp.int32(slot),
+            jnp.int32(p), jnp.int32(budget),
+            jax.random.fold_in(self.key, 1000 + self.admitted),
+            gp=self.gen)
+        self.done[slot] = False
+        self.idx[slot] = 0
+        self._budget[slot] = budget
+        self.refills += 1
+        # sync (async dispatch): the refilled row's first token exists
+        # now — the TTFT stamp callers take must not lead the device
+        jax.block_until_ready(self.tok)
+
+    # ------------------------------------------------------------- decoding
+
+    def run_segment(self, drain: bool = False) -> List[Tuple[int, List[int]]]:
+        """Advance the compiled decode loop until some live row
+        finishes; with ``drain=True`` (nothing pending) run the whole
+        frame to completion instead.  Returns the newly finished
+        [(slot, tokens)].  One dispatch + one packed-summary transfer
+        (plus the output buffer when rows finished)."""
+        assert self.active()
+        B = self.B
+        live = ~self.done
+        maxrem = int((self._budget[live] - self.idx[live]).max())
+        cap = self.eng._cont_kv_cap(self.length + maxrem + 2)
+        (self.tok, self._done_d, self._rem_d, self._idx_d, self.out,
+         self.cache, summary) = self.eng._decode_cont(
+            self.eng.params, self.tok, self.cache, self._seg_key,
+            self._done_d, self._rem_d, self._idx_d, self.out,
+            jnp.int32(self.tstep), jnp.asarray(drain), gp=self.gen,
+            kv_cap=cap)
+        s = np.asarray(summary)                 # the one per-segment sync
+        done_new = s[:B].astype(bool)
+        idx_new = s[B:2 * B]
+        self.tstep = int(s[2 * B])
+        self.length = int(s[2 * B + 1])
+        newly = np.nonzero(done_new & ~self.done)[0]
+        events = []
+        if newly.size:
+            out_h = np.asarray(self.out)        # [B, max_new], small
+            events = [(int(i), out_h[i, :idx_new[i]].tolist())
+                      for i in newly]
+        self.done = done_new
+        self.idx = idx_new.astype(np.int32)
+        self.segments += 1
+        return events

@@ -1,20 +1,20 @@
-"""Request-level serving scheduler over a static-shape ServeEngine.
+"""Request-level serving schedulers over a static-shape ServeEngine.
 
-The engine compiles per (batch, prompt-bucket) shape, so the scheduler's
-job is to pack an arbitrary stream of variable-length requests into
-those static slots with as little padding waste and as few distinct
-compilations as possible — the static-shape analogue of continuous
-batching:
+Two policies, one submit/run/result contract:
 
-  * requests are grouped by their prompt bucket (``engine.prompt_bucket``),
-  * each ``step()`` runs one *wave*: up to ``batch_size`` requests from
-    the currently fullest bucket share one compiled generate call,
-  * slots freed by a finished wave are immediately reused by the next
-    wave (possibly from a different bucket — the jit cache keeps every
-    previously seen bucket warm).
+``RequestQueue`` — synchronous waves.  Requests are grouped by prompt
+bucket (``engine.prompt_bucket``); each ``step()`` runs one *wave* of up
+to ``batch_size`` requests through one compiled generate call, and
+freed slots are reused by the next wave.  A wave runs to its slowest
+row, so short requests queue behind stragglers — kept as the simple,
+fully-compiled fallback path.
 
-Replaces the fixed ``range(0, len(prompts), B)`` chunking that serving
-consumers (RAG pipeline, launchers, benchmarks) used to hand-roll.
+``ContinuousQueue`` — continuous batching (chunked prefill + per-slot
+refill, ``engine.prefill_chunk`` set).  The moment a row finishes, the
+next pending request is chunk-prefilled and swapped into the freed slot
+(``ContinuousSession``); per-request ``max_new_tokens`` budgets are
+honored exactly, and per-request latency / time-to-first-token land in
+``ContinuousStats``.  See docs/ARCHITECTURE.md ("Continuous batching").
 
     queue = RequestQueue(engine, GenerationParams(max_new_tokens=24))
     rids = queue.submit_all(token_prompts)
@@ -22,13 +22,16 @@ consumers (RAG pipeline, launchers, benchmarks) used to hand-roll.
 """
 from __future__ import annotations
 
+import time
+import warnings
 from collections import defaultdict
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence
 
 import jax
+import numpy as np
 
-from repro.serving.engine import ServeEngine
+from repro.serving.engine import ContinuousSession, ServeEngine
 from repro.serving.sampling import GenerationParams
 
 
@@ -146,4 +149,190 @@ class RequestQueue:
         return {rid: c.tokens for rid, c in self._done.items()}
 
     def result(self, rid: int) -> Completion:
+        return self._done[rid]
+
+
+# --------------------------------------------------------------------------
+# continuous batching
+
+
+@dataclass
+class ContinuousCompletion:
+    rid: int
+    tokens: List[int]
+    prompt_len: int
+    budget: int                   # per-request max_new_tokens
+    slot: int                     # engine batch row it decoded in
+    frame: int                    # session frame it was admitted into
+    ttft_s: float                 # run-start -> first token (prefill done)
+    done_s: float                 # run-start -> last token
+
+
+@dataclass
+class ContinuousStats:
+    requests: int = 0
+    tokens_out: int = 0
+    frames: int = 0               # full batch (re)starts
+    segments: int = 0             # compiled decode segments dispatched
+    refills: int = 0              # mid-frame per-slot swaps
+    ttft_s: List[float] = field(default_factory=list)
+    latency_s: List[float] = field(default_factory=list)
+
+    @staticmethod
+    def _pct(xs: List[float], q: float) -> float:
+        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+    @property
+    def ttft_p50(self) -> float:
+        return self._pct(self.ttft_s, 50)
+
+    @property
+    def ttft_p95(self) -> float:
+        return self._pct(self.ttft_s, 95)
+
+    @property
+    def latency_p50(self) -> float:
+        return self._pct(self.latency_s, 50)
+
+    @property
+    def latency_p95(self) -> float:
+        return self._pct(self.latency_s, 95)
+
+
+@dataclass
+class _ContRequest:
+    rid: int
+    prompt: List[int]
+    budget: int
+
+
+class ContinuousQueue:
+    """Continuous-batching scheduler: FIFO admission with per-slot
+    refill.  Requests carry their own ``max_new_tokens`` budget (capped
+    by the queue's ``GenerationParams``); a pending request that does
+    not yet fit the live frame (prompt frames below the current
+    position, budget above it) is skipped until it does or a fresh
+    frame starts.  Completion identity, per-request latency and TTFT
+    are preserved via request ids."""
+
+    def __init__(self, engine: ServeEngine,
+                 gen: Optional[GenerationParams] = None, *, key=None):
+        self.engine = engine
+        self.gen = gen or GenerationParams()
+        if engine.prefill_chunk is None:
+            raise ValueError("ContinuousQueue needs an engine built with "
+                             "prefill_chunk=...; use RequestQueue for "
+                             "synchronous waves")
+        if self.gen.max_new_tokens < 1 \
+                or self.gen.max_new_tokens >= engine.max_len \
+                or engine.cont_max_prompt_len(self.gen.max_new_tokens) < 1:
+            raise ValueError(
+                f"max_new_tokens={self.gen.max_new_tokens} and "
+                f"prefill_chunk={engine.prefill_chunk} do not fit the "
+                f"engine cache (max_len={engine.max_len})")
+        self._key = key if key is not None else jax.random.PRNGKey(0)
+        self._pending: List[_ContRequest] = []
+        self._done: Dict[int, ContinuousCompletion] = {}
+        self._next_rid = 0
+        self.stats = ContinuousStats()
+
+    # -------------------------------------------------------------- intake
+
+    def submit(self, prompt: Sequence[int],
+               max_new_tokens: Optional[int] = None) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        budget = self.gen.max_new_tokens if max_new_tokens is None \
+            else min(max_new_tokens, self.gen.max_new_tokens)
+        budget = max(1, budget)
+        prompt = list(prompt)
+        self.stats.requests += 1
+        if not prompt:
+            # empty prompts condition on nothing -> empty completion
+            # (mirrors ServeEngine._route_empty_prompts)
+            self._done[rid] = ContinuousCompletion(
+                rid, [], 0, budget, -1, -1, 0.0, 0.0)
+            return rid
+        cap = self.engine.cont_max_prompt_len(self.gen.max_new_tokens)
+        if len(prompt) > cap:
+            warnings.warn(
+                f"prompt of {len(prompt)} tokens exceeds the continuous "
+                f"frame capacity ({cap} = chunk-aligned max_len="
+                f"{self.engine.max_len} - max_new_tokens="
+                f"{self.gen.max_new_tokens}); truncated-left to {cap} "
+                f"tokens", stacklevel=2)
+            prompt = prompt[-cap:]
+        self._pending.append(_ContRequest(rid, prompt, budget))
+        return rid
+
+    def submit_all(self, prompts: Iterable[Sequence[int]],
+                   max_new_tokens: Optional[Iterable[int]] = None
+                   ) -> List[int]:
+        budgets = list(max_new_tokens) if max_new_tokens is not None \
+            else None
+        prompts = list(prompts)
+        return [self.submit(p, budgets[i] if budgets else None)
+                for i, p in enumerate(prompts)]
+
+    def pending(self) -> int:
+        return len(self._pending)
+
+    # ----------------------------------------------------------- scheduling
+
+    def _admissible(self, session: ContinuousSession
+                    ) -> Optional[_ContRequest]:
+        """First pending request (FIFO) that fits the live frame."""
+        for r in self._pending:
+            if session.can_refill(len(r.prompt), r.budget):
+                return r
+        return None
+
+    def run(self) -> Dict[int, List[int]]:
+        """Drain the queue; returns {rid: generated tokens}.  TTFT and
+        latency are measured from this call's start (queue wait
+        included), so they compose across requests like a serving
+        trace."""
+        t0 = time.perf_counter()
+        session = ContinuousSession(self.engine, self.gen, key=self._key)
+        owner: Dict[int, _ContRequest] = {}
+        while self._pending or session.active():
+            if not session.active():
+                batch = self._pending[:session.B]
+                del self._pending[:len(batch)]
+                session.begin_frame([r.prompt for r in batch],
+                                    [r.budget for r in batch])
+                now = time.perf_counter() - t0
+                for slot, r in enumerate(batch):
+                    owner[slot] = r
+                    self.stats.ttft_s.append(now)
+                    self._done[r.rid] = ContinuousCompletion(
+                        r.rid, [], len(r.prompt), r.budget, slot,
+                        session.frames, now, now)
+                continue
+            for slot, tokens in session.run_segment(
+                    drain=not self._pending):
+                r = owner.pop(slot)
+                now = time.perf_counter() - t0
+                c = self._done[r.rid]
+                c.tokens, c.done_s = tokens, now
+                self.stats.tokens_out += len(tokens)
+                self.stats.latency_s.append(now)
+            for slot in session.free_slots():
+                r = self._admissible(session)
+                if r is None:
+                    break
+                self._pending.remove(r)
+                session.refill(slot, r.prompt, r.budget)
+                owner[slot] = r
+                now = time.perf_counter() - t0
+                self.stats.ttft_s.append(now)
+                self._done[r.rid] = ContinuousCompletion(
+                    r.rid, [], len(r.prompt), r.budget, slot,
+                    session.frames, now, now)
+        self.stats.frames += session.frames
+        self.stats.segments += session.segments
+        self.stats.refills += session.refills
+        return {rid: c.tokens for rid, c in self._done.items()}
+
+    def result(self, rid: int) -> ContinuousCompletion:
         return self._done[rid]

@@ -1,0 +1,270 @@
+"""Continuous batching: chunked prefill + per-slot refill.
+
+Covers the invariants docs/ARCHITECTURE.md promises: mid-stream
+admission parity with ``generate_reference`` for every cache kind,
+refill with an empty pending queue, a straggler row holding its slot
+while short requests stream through the others, TTFT/latency stats
+monotonicity, the chunk-count compile-cache bound on recurrent
+architectures, and the per-row cache swap primitives."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import Model
+from repro.models import cache as cache_lib
+from repro.serving import (ContinuousQueue, GenerationParams, RequestQueue,
+                           ServeEngine)
+
+
+def make_engine(arch, key, batch_size=2, max_len=96, prefill_chunk=8):
+    cfg = get_smoke_config(arch)
+    cf = float(cfg.moe.num_experts) if cfg.moe else None
+    params = Model(cfg).init_params(key, max_seq=max_len)
+    return ServeEngine(cfg, params, max_len=max_len, batch_size=batch_size,
+                       moe_capacity_factor=cf, prefill_chunk=prefill_chunk)
+
+
+def reference_solo(eng, prompt, budget, eos_id=None):
+    gp = GenerationParams(max_new_tokens=budget, eos_id=eos_id)
+    return eng.generate_reference([prompt], gen=gp)[0]
+
+
+# ------------------------------------------------------------------ parity
+
+
+@pytest.mark.parametrize("arch,prompts", [
+    ("llama3-8b",                                  # full attention
+     [[1, 2, 3, 4, 5], [7, 8, 9], [11, 12, 13, 14, 15, 16, 17],
+      [3, 1, 4, 1, 5], [9, 2, 6]]),
+    ("gemma2-9b",                                  # rolling local + attn
+     [[1, 2, 3, 4, 5, 6], [7, 8, 9], [11, 12, 13, 14, 15, 16, 17],
+      [3, 1, 4, 1, 5], [9, 2, 6]]),
+    ("xlstm-350m",                                 # recurrent mLSTM/sLSTM
+     [[1, 2, 3, 4, 5, 6], [7, 8, 9], [11, 12, 13, 14, 15, 16, 17],
+      [3, 1, 4, 1, 5], [9, 2, 6]]),
+    ("hymba-1.5b",                                 # hybrid attn + mamba
+     [[1, 2, 3, 4, 5, 6], [7, 8, 9], [11, 12, 13, 14, 15, 16, 17],
+      [3, 1, 4, 1, 5], [9, 2, 6]]),
+    # whisper decodes with LEARNED (absolute) positions: the continuous
+    # path counts per-row positions from the row's first token, which
+    # matches the reference run exactly when the reference's bucket pad
+    # is a no-op — i.e. power-of-two prompt lengths
+    ("whisper-base",
+     [[1, 2, 3, 4, 5, 6, 7, 8], [9, 10, 11, 12, 13, 14, 15, 16],
+      [5] * 8, [7] * 16, [3] * 8]),
+])
+def test_midstream_refill_parity(arch, prompts, key):
+    """Requests admitted mid-stream into a running frame (different
+    absolute offsets, swapped cache rows) must emit the exact greedy
+    tokens of a solo reference run — for every cache kind, with one
+    row decoding past the sliding window while refills happen."""
+    eng = make_engine(arch, key)
+    budgets = [24, 3, 8, 4, 5]                 # row 0 is a straggler
+    queue = ContinuousQueue(eng, GenerationParams(max_new_tokens=24))
+    rids = queue.submit_all(prompts, budgets)
+    outs = queue.run()
+    for rid, p, b in zip(rids, prompts, budgets):
+        assert outs[rid] == reference_solo(eng, p, b), (p, b)
+    assert queue.stats.refills >= 2            # admissions were mid-stream
+
+
+def test_eos_midstream_refill(key):
+    """EOS must terminate a refilled row exactly as in the reference
+    loop (EOS included as the last token)."""
+    eng = make_engine("llama3-8b", key)
+    free = eng.generate([[1, 2, 3]], max_new_tokens=8)[0]
+    eos = free[1]                              # row stops after 2 tokens
+    prompts = [[1, 2, 3], [4, 5, 6, 7], [1, 2, 3], [8, 9]]
+    queue = ContinuousQueue(
+        eng, GenerationParams(max_new_tokens=8, eos_id=eos))
+    rids = queue.submit_all(prompts)
+    outs = queue.run()
+    for rid, p in zip(rids, prompts):
+        assert outs[rid] == reference_solo(eng, p, 8, eos_id=eos)
+    assert outs[rids[0]][-1] == eos and len(outs[rids[0]]) == 2
+
+
+# -------------------------------------------------------------- scheduling
+
+
+def test_refill_with_empty_pending(key):
+    """A row finishing with nothing pending leaves its slot idle; the
+    frame drains without refills and without inventing tokens."""
+    eng = make_engine("llama3-8b", key)
+    queue = ContinuousQueue(eng, GenerationParams(max_new_tokens=12))
+    rids = queue.submit_all([[1, 2, 3], [4, 5, 6, 7]], [3, 12])
+    outs = queue.run()
+    assert len(outs[rids[0]]) == 3 and len(outs[rids[1]]) == 12
+    assert queue.stats.refills == 0
+    assert queue.stats.frames == 1
+
+
+def test_straggler_row_holds_slot(key):
+    """One long-budget row must not block the other slot: short
+    requests stream through it via refills while the straggler runs."""
+    eng = make_engine("llama3-8b", key)
+    prompts = [[1, 2, 3], [4, 5], [6, 7, 8], [9, 1], [2, 4, 6]]
+    budgets = [24, 3, 3, 3, 3]
+    queue = ContinuousQueue(eng, GenerationParams(max_new_tokens=24))
+    rids = queue.submit_all(prompts, budgets)
+    outs = queue.run()
+    for rid, p, b in zip(rids, prompts, budgets):
+        assert len(outs[rid]) == b
+        assert outs[rid] == reference_solo(eng, p, b)
+    st = queue.stats
+    assert st.frames == 1                      # straggler never drained
+    assert st.refills == 3                     # short rows reused slot 1
+    # the straggler outlives every request that was refilled before the
+    # final drain segment (events inside one segment share its end time
+    # up to loop microseconds)
+    assert all(queue.result(rids[0]).done_s >= queue.result(r).done_s - 1e-3
+               for r in rids)
+
+
+def test_frame_recycling_when_prompt_does_not_fit(key):
+    """A pending prompt whose chunk frames exceed the live frame's
+    position waits for a fresh frame instead of corrupting the cache."""
+    eng = make_engine("llama3-8b", key, max_len=64, prefill_chunk=8)
+    long_prompt = list(range(1, 41))           # padded 40 > first frame 8
+    queue = ContinuousQueue(eng, GenerationParams(max_new_tokens=4))
+    rids = queue.submit_all([[1, 2, 3], [4, 5], long_prompt])
+    outs = queue.run()
+    assert queue.stats.frames == 2             # long prompt got frame 2
+    for rid, p in zip(rids, [[1, 2, 3], [4, 5], long_prompt]):
+        assert outs[rid] == reference_solo(eng, p, 4)
+
+
+# -------------------------------------------------------------- stats/TTFT
+
+
+def test_ttft_and_latency_stats_monotone(key):
+    eng = make_engine("llama3-8b", key)
+    queue = ContinuousQueue(eng, GenerationParams(max_new_tokens=6))
+    prompts = [[1, 2, 3], [4, 5, 6], [7, 8], [9, 1, 2], [3, 4], [5, 6, 7]]
+    rids = queue.submit_all(prompts)
+    queue.run()
+    st = queue.stats
+    assert len(st.ttft_s) == len(prompts) == len(st.latency_s)
+    # TTFT is recorded at admission: FIFO admissions => monotone
+    assert st.ttft_s == sorted(st.ttft_s)
+    for rid in rids:
+        c = queue.result(rid)
+        assert 0.0 <= c.ttft_s <= c.done_s      # first token before last
+    assert st.ttft_p50 <= st.ttft_p95
+    assert st.latency_p50 <= st.latency_p95
+    assert st.ttft_p95 <= st.latency_p95 + 1e-9
+
+
+# ------------------------------------------------------------ compile cache
+
+
+@pytest.mark.parametrize("arch", ["xlstm-350m", "hymba-1.5b"])
+def test_chunked_prefill_compile_cache_bounded(arch, key):
+    """The wave path recompiles the prefill per exact prompt length on
+    recurrent architectures; the chunked path must compile exactly two
+    prefill programs ([B, C] frame + [1, C] staging scan per chunk
+    count) no matter how many distinct lengths stream through."""
+    eng = make_engine(arch, key, max_len=96, prefill_chunk=8)
+    lens = [3, 5, 7, 9, 11, 13, 17, 21, 6, 4]
+    prompts = [[(i + 2)] * n for i, n in enumerate(lens)]
+    queue = ContinuousQueue(eng, GenerationParams(max_new_tokens=4))
+    rids = queue.submit_all(prompts)
+    outs = queue.run()
+    assert all(len(outs[r]) == 4 for r in rids)
+    # frame program [B, C] is one entry; fused refills compile one scan
+    # per distinct chunk count (<= ceil(max len/C) = 3 here)
+    assert eng._prefill_chunk._cache_size() == 1
+    assert eng._refill._cache_size() <= 3
+    # and the per-exact-length wave prefill was never compiled
+    assert eng._prefill_sample._cache_size() == 0
+
+
+# ------------------------------------------------------------- cache swaps
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "xlstm-350m"])
+def test_insert_and_extract_row_roundtrip(arch, key):
+    """insert_row/extract_row must move exactly one batch row of every
+    per-row leaf (KV, recurrent state, first) and nothing else."""
+    cfg = get_smoke_config(arch)
+    model = Model(cfg)
+    k1, k2 = jax.random.split(key)
+
+    def filled(seed_key, batch, scale):
+        cache = model.init_cache(batch, 32, jnp.float32)
+        leaves, tree = jax.tree.flatten(cache)
+        filled_leaves = [
+            (jax.random.normal(jax.random.fold_in(seed_key, i),
+                               leaf.shape) * scale).astype(leaf.dtype)
+            if jnp.issubdtype(leaf.dtype, jnp.floating) else leaf
+            for i, leaf in enumerate(leaves)]
+        return jax.tree.unflatten(tree, filled_leaves)
+
+    dst = filled(k1, 3, 1.0)
+    src = filled(k2, 2, 100.0)
+    dst["first"] = jnp.asarray([0, 1, 2], jnp.int32)
+    src["first"] = jnp.asarray([7, 8], jnp.int32)
+    out = cache_lib.insert_row(dst, src, jnp.int32(1), jnp.int32(2))
+    # row 2 now equals src row 1, rows 0/1 untouched
+    got = cache_lib.extract_row(out, jnp.int32(2))
+    want = cache_lib.extract_row(src, jnp.int32(1))
+    for g, w in zip(jax.tree.leaves(got["slots"]),
+                    jax.tree.leaves(want["slots"])):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    assert int(out["first"][2]) == 8
+    for row in (0, 1):
+        g = cache_lib.extract_row(out, jnp.int32(row))
+        w = cache_lib.extract_row(dst, jnp.int32(row))
+        for a, b in zip(jax.tree.leaves(g["slots"]),
+                        jax.tree.leaves(w["slots"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert list(np.asarray(out["first"][:2])) == [0, 1]
+
+
+# -------------------------------------------------------------- edge cases
+
+
+def test_empty_prompt_and_budget_cap(key):
+    eng = make_engine("llama3-8b", key)
+    queue = ContinuousQueue(eng, GenerationParams(max_new_tokens=6))
+    rids = queue.submit_all([[], [1, 2, 3]], [6, 99])   # budget capped
+    outs = queue.run()
+    assert outs[rids[0]] == []
+    assert len(outs[rids[1]]) == 6
+    c = queue.result(rids[0])
+    assert c.ttft_s == 0.0 and c.done_s == 0.0
+
+
+def test_overlong_prompt_truncates_left_continuous(key):
+    eng = make_engine("llama3-8b", key, max_len=32, prefill_chunk=8)
+    queue = ContinuousQueue(eng, GenerationParams(max_new_tokens=4))
+    with pytest.warns(UserWarning, match="truncated-left"):
+        rid = queue.submit(list(range(1, 61)))
+    outs = queue.run()
+    assert len(outs[rid]) == 4
+    kept = list(range(1, 61))[-eng.cont_max_prompt_len(4):]
+    assert outs[rid] == reference_solo(eng, kept, 4)
+
+
+def test_continuous_requires_chunked_engine(key):
+    cfg = get_smoke_config("llama3-8b")
+    params = Model(cfg).init_params(key, max_seq=32)
+    wave_only = ServeEngine(cfg, params, max_len=32, batch_size=2)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ContinuousQueue(wave_only, GenerationParams(max_new_tokens=4))
+    eng = make_engine("llama3-8b", key, max_len=16, prefill_chunk=8)
+    with pytest.raises(ValueError, match="do not fit"):
+        ContinuousQueue(eng, GenerationParams(max_new_tokens=12))
+
+
+def test_wave_queue_still_runs_on_chunked_engine(key):
+    """prefill_chunk must not disturb the RequestQueue fallback path."""
+    eng = make_engine("llama3-8b", key)
+    queue = RequestQueue(eng, GenerationParams(max_new_tokens=4))
+    rids = queue.submit_all([[1, 2, 3], [4, 5, 6, 7], [8, 9]])
+    outs = queue.run()
+    assert all(len(outs[r]) == 4 for r in rids)

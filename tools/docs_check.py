@@ -1,0 +1,122 @@
+"""Executable-docs gate: run the README's fenced bash blocks and check
+intra-repo markdown links, so the documented entry points are executed
+on every PR and cannot rot.
+
+Rules:
+  * every ```bash block in README.md runs as one shell script
+    (``bash -e``) from the repo root, unless the line immediately above
+    the fence is ``<!-- docs-check: skip -->`` (used for commands CI
+    already runs as its own step, e.g. the tier-1 pytest);
+  * every relative ``[text](path)`` link in every tracked *.md must
+    resolve to an existing file or directory (anchors and http(s)
+    links are ignored).
+
+    python tools/docs_check.py              # run commands + check links
+    python tools/docs_check.py --links-only
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SKIP_MARK = "<!-- docs-check: skip -->"
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+# [text](target) — skips images' srcsets etc.; good enough for our docs
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def bash_blocks(md_path: str):
+    """(start_line, script) for every non-skipped ```bash block."""
+    with open(md_path) as f:
+        lines = f.read().splitlines()
+    blocks, i = [], 0
+    while i < len(lines):
+        m = FENCE_RE.match(lines[i])
+        if m and m.group(1) == "bash":
+            skipped = i > 0 and lines[i - 1].strip() == SKIP_MARK
+            body = []
+            i += 1
+            start = i
+            while i < len(lines) and not lines[i].startswith("```"):
+                body.append(lines[i])
+                i += 1
+            if not skipped:
+                blocks.append((start + 1, "\n".join(body)))
+        i += 1
+    return blocks
+
+
+def run_blocks(md_path: str, timeout: int) -> int:
+    failures = 0
+    for line_no, script in bash_blocks(md_path):
+        print(f"[docs-check] {os.path.relpath(md_path, ROOT)}:{line_no} "
+              f"running:\n{script}\n", flush=True)
+        try:
+            proc = subprocess.run(["bash", "-e", "-c", script], cwd=ROOT,
+                                  timeout=timeout)
+            rc = proc.returncode
+        except subprocess.TimeoutExpired:
+            rc = f"timeout after {timeout}s"
+        if rc != 0:
+            print(f"[docs-check] FAILED (rc={rc}): block at "
+                  f"{md_path}:{line_no}", flush=True)
+            failures += 1
+    return failures
+
+
+def markdown_files():
+    out = subprocess.run(
+        ["git", "ls-files", "--cached", "--others", "--exclude-standard",
+         "*.md", "**/*.md"], cwd=ROOT, capture_output=True, text=True)
+    files = [f for f in out.stdout.split() if f.endswith(".md")]
+    return sorted(set(files)) or ["README.md"]
+
+
+def check_links() -> int:
+    failures = 0
+    for md in markdown_files():
+        md_path = os.path.join(ROOT, md)
+        if not os.path.exists(md_path):
+            continue
+        with open(md_path) as f:
+            text = f.read()
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "#", "mailto:")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(md_path), rel))
+            if not os.path.exists(resolved):
+                print(f"[docs-check] dead link in {md}: ({target})",
+                      flush=True)
+                failures += 1
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--links-only", action="store_true",
+                    help="skip executing README bash blocks")
+    ap.add_argument("--timeout", type=int, default=900,
+                    help="per-block timeout in seconds")
+    args = ap.parse_args()
+    failures = check_links()
+    if not args.links_only:
+        failures += run_blocks(os.path.join(ROOT, "README.md"),
+                               args.timeout)
+    if failures:
+        print(f"[docs-check] {failures} failure(s)", flush=True)
+        return 1
+    print("[docs-check] OK: links resolve and README commands ran",
+          flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
