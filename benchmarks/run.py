@@ -41,7 +41,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="table1|table2|table3|fig5|fig6|motivation|"
-                         "ablation|kernels|cluster|retrieval")
+                         "ablation|kernels|cluster|retrieval|serving")
     args = ap.parse_args()
     sections = {
         "table1": lambda: __import__("benchmarks.table1_latency_fit",
@@ -63,6 +63,9 @@ def main() -> None:
                                       fromlist=["main"]).main([]),
         "retrieval": lambda: __import__("benchmarks.retrieval_scale",
                                         fromlist=["main"]).main(["--smoke"]),
+        "serving": lambda: __import__("benchmarks.serve_throughput",
+                                      fromlist=["main"]).main(
+                                          ["--paged-prefix"]),
     }
     todo = [args.only] if args.only else list(sections)
     for name in todo:

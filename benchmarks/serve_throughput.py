@@ -21,9 +21,19 @@ into ``BENCH_serve_continuous.json``.  Bars: continuous p95 latency
 and mean TTFT < the wave baseline (a wave runs to its slowest row, so
 short requests queue behind stragglers).
 
+``--paged-prefix`` benchmarks the paged KV cache: (a) per-decode-step
+cost of a continuous segment as a function of *live* tokens — paged
+rows read only their allocated blocks (``nb_cap``), so the step cost
+must track live context, not ``max_len``; (b) a shared-retrieved-
+context trace (few distinct contexts, many questions) through
+``ContinuousQueue`` with the prefix cache on vs off — repeated
+contexts fork prefilled blocks instead of re-prefilling, so mean TTFT
+must improve >= 2x.  Rows land in ``BENCH_paged_prefix.json``.
+
     PYTHONPATH=src python -m benchmarks.serve_throughput
     PYTHONPATH=src python -m benchmarks.serve_throughput --step-cost
     PYTHONPATH=src python -m benchmarks.serve_throughput --continuous
+    PYTHONPATH=src python -m benchmarks.serve_throughput --paged-prefix
     PYTHONPATH=src python -m benchmarks.serve_throughput \
         --arch gemma2-9b --batch 8 --new-tokens 64 --d-model 64
 """
@@ -165,7 +175,120 @@ def continuous_benchmark(args):
           f"{st.frames} frames)")
 
 
-def main():
+def cont_step_cost(cfg, params, *, max_len, batch, prompt_len, budget,
+                   paged, chunk=16, repeats=4):
+    """Best-of per-decode-step seconds of a continuous segment whose
+    rows hold ``prompt_len`` live tokens (fresh frame per repeat; the
+    first repeat compiles)."""
+    kw = {"paged": True, "block_size": 16} if paged else {}
+    eng = ServeEngine(cfg, params, max_len=max_len, batch_size=batch,
+                      prefill_chunk=chunk, **kw)
+    gen = GenerationParams(max_new_tokens=budget)
+    prompts = [[(5 + 7 * i + j) % (cfg.vocab_size - 5) + 5
+                for j in range(prompt_len)] for i in range(batch)]
+    times = []
+    for _ in range(repeats + 1):
+        sess = eng.continuous_session(gen, key=jax.random.PRNGKey(0))
+        sess.begin_frame(prompts, [budget] * batch)
+        t0 = time.perf_counter()
+        while sess.active():
+            sess.run_segment(drain=True)
+        times.append(time.perf_counter() - t0)
+        sess.release()
+    return min(times[1:]) / budget
+
+
+def shared_context_trace(n_requests, n_contexts, ctx_len, vocab):
+    """RAG-shaped trace: few distinct retrieved contexts, many short
+    questions, contexts cycling round-robin."""
+    contexts = [[(5 + 11 * c + j) % (vocab - 5) + 5 for j in range(ctx_len)]
+                for c in range(n_contexts)]
+    reqs = []
+    for i in range(n_requests):
+        suffix = [(3 + 7 * i + j) % (vocab - 5) + 5 for j in range(3)]
+        reqs.append((contexts[i % n_contexts], suffix))
+    return reqs
+
+
+def run_prefix_trace(eng, gen, reqs, use_prefix):
+    queue = ContinuousQueue(eng, gen, key=jax.random.PRNGKey(1))
+    rids = [queue.submit(ctx + sfx,
+                         prefix_len=len(ctx) if use_prefix else None)
+            for ctx, sfx in reqs]
+    t0 = time.perf_counter()
+    queue.run()
+    wall = time.perf_counter() - t0
+    ttft = [queue.result(r).ttft_s for r in rids]
+    return float(np.mean(ttft)), wall, queue.stats
+
+
+def paged_prefix_benchmark(args):
+    """Paged step-cost scaling + shared-prefix TTFT; own Bench file."""
+    d_model, vocab, batch, budget = 256, 1024, 2, 6
+    cfg = get_smoke_config(args.arch, max_d_model=d_model, vocab=vocab)
+    params = Model(cfg).init_params(jax.random.PRNGKey(0), max_seq=1024)
+
+    # (a) decode step cost: paged must track live tokens, not max_len
+    small, large = args.step_max_lens
+    live_lo, live_hi = 40, 3 * large // 4
+    step = {}
+    for name, ml, live, paged in [
+            ("paged", small, live_lo, True),
+            ("paged", large, live_lo, True),
+            ("paged", large, live_hi, True),
+            ("dense", small, live_lo, False),
+            ("dense", large, live_lo, False)]:
+        step[(name, ml, live)] = cont_step_cost(
+            cfg, params, max_len=ml, batch=batch, prompt_len=live,
+            budget=budget, paged=paged)
+
+    # (b) shared-context TTFT: prefix cache on vs off
+    ctx_len, n_ctx, n_req, max_len = 480, 4, 48, 560
+    eng = ServeEngine(cfg, params, max_len=max_len, batch_size=batch,
+                      prefill_chunk=16, paged=True, block_size=16,
+                      num_blocks=256)
+    gen = GenerationParams(max_new_tokens=budget)
+    reqs = shared_context_trace(n_req, n_ctx, ctx_len, vocab)
+    run_prefix_trace(eng, gen, reqs, False)          # warm compiles
+    run_prefix_trace(eng, gen, reqs, True)
+    ttft_off, wall_off, st_off = run_prefix_trace(eng, gen, reqs, False)
+    ttft_on, wall_on, st_on = run_prefix_trace(eng, gen, reqs, True)
+    lookups = max(st_on.prefix_hits + st_on.prefix_misses, 1)
+    hit_rate = st_on.prefix_hits / lookups
+    speedup = ttft_off / max(ttft_on, 1e-9)
+
+    bench = Bench("paged_prefix", config={
+        "arch": args.arch, "batch": batch, "budget": budget,
+        "d_model": d_model, "vocab": vocab, "block_size": 16,
+        "step_max_lens": [small, large], "live_tokens": [live_lo, live_hi],
+        "trace": {"n_requests": n_req, "n_contexts": n_ctx,
+                  "ctx_len": ctx_len, "max_len": max_len},
+        "jax": jax.__version__, "device": jax.devices()[0].platform,
+    })
+    for (name, ml, live), sec in step.items():
+        bench.add(f"{name}_step", ml, live, sec * 1e3, 0.0)
+    flat = step[("paged", large, live_lo)] / step[("paged", small, live_lo)]
+    scale = step[("paged", large, live_hi)] / step[("paged", large, live_lo)]
+    bench.add("paged_flat_in_max_len", large, live_lo, 0.0, flat)
+    bench.add("paged_scales_with_live", large, live_hi, 0.0, scale)
+    bench.add("ttft_prefix_off", max_len, 0, ttft_off * 1e3, 0.0)
+    bench.add("ttft_prefix_on", max_len, 0, ttft_on * 1e3, speedup)
+    bench.add("prefix_hit_rate", max_len, st_on.prefix_hits, 0.0, hit_rate)
+    bench.finish(["metric", "max_len", "live_tokens_or_hits", "ms",
+                  "ratio"])
+    print(f"paged step cost: {flat:.2f}x across max_len "
+          f"{small}->{large} at {live_lo} live tokens "
+          f"({'meets' if flat < 1.5 else 'EXCEEDS'} the <1.5x flat bar); "
+          f"{scale:.2f}x from {live_lo}->{live_hi} live tokens "
+          f"(cost tracks live context)")
+    print(f"shared-prefix TTFT: {ttft_off*1e3:.1f} ms off -> "
+          f"{ttft_on*1e3:.1f} ms on = {speedup:.2f}x "
+          f"({'meets' if speedup >= 2.0 else 'BELOW'} the >=2x bar; "
+          f"hit rate {hit_rate:.0%}, {st_on.prefix_hits} hits / "
+          f"{st_on.prefix_misses} misses)")
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b", choices=ARCH_IDS)
     ap.add_argument("--batch", type=int, default=8)
@@ -185,7 +308,11 @@ def main():
                          "trace (own BENCH_serve_continuous.json)")
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="chunk size of the continuous prefill program")
-    args = ap.parse_args()
+    ap.add_argument("--paged-prefix", action="store_true",
+                    help="also benchmark the paged KV cache: decode "
+                         "step cost vs live tokens and shared-prefix "
+                         "TTFT (own BENCH_paged_prefix.json)")
+    args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch, max_d_model=args.d_model,
                            vocab=args.vocab)
@@ -245,6 +372,8 @@ def main():
               f"<1.5x flat-in-max_len bar)")
     if args.continuous:
         continuous_benchmark(args)
+    if args.paged_prefix:
+        paged_prefix_benchmark(args)
 
 
 if __name__ == "__main__":

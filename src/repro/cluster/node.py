@@ -42,7 +42,7 @@ from repro.core.inter_node import CapacityFunction
 from repro.data.corpus import Document
 from repro.data.tokenizer import EOS, Tokenizer
 from repro.metrics.text import composite_quality
-from repro.rag.pipeline import build_prompt
+from repro.rag.pipeline import build_prompt, split_prompt
 from repro.retrieval.cache import SemanticQueryCache
 from repro.retrieval.encoder import TextEncoder
 from repro.retrieval.index import build_index
@@ -62,6 +62,8 @@ class LiveNodeStats:
     retrieval_s: float = 0.0
     generate_s: float = 0.0
     cache_hits: int = 0               # retrievals served by the cache
+    prefix_hits: int = 0              # paged shared-prefix cache hits
+    prefix_misses: int = 0            # ... and misses (prefix prefills)
     remote_contexts: int = 0          # contexts fetched from other shards
     remote_gold: int = 0              # ... that contained the gold answer
 
@@ -81,7 +83,9 @@ class LiveEdgeNode:
                  max_new_tokens: int = 8, seed: int = 0,
                  index_kind: str = "flat", nprobe: Optional[int] = None,
                  cache: Optional[SemanticQueryCache] = None,
-                 queue: str = "continuous", prefill_chunk: int = 32):
+                 queue: str = "continuous", prefill_chunk: int = 32,
+                 paged: bool = False, block_size: int = 16,
+                 admission: str = "fifo"):
         if queue not in ("continuous", "wave"):
             raise ValueError(f"queue={queue!r} (continuous|wave)")
         self.node_id = node_id
@@ -91,11 +95,13 @@ class LiveEdgeNode:
         self.encoder = encoder
         self.top_k = top_k
         self.queue_kind = queue
+        self.admission = admission
         # chunk must leave decode room; shrink for tiny test caches
         chunk = min(prefill_chunk, max(1, (max_len - max_new_tokens) // 2))
         self.engine = ServeEngine(
             cfg, params, max_len=max_len, batch_size=batch_size,
-            prefill_chunk=chunk if queue == "continuous" else None)
+            prefill_chunk=chunk if queue == "continuous" else None,
+            paged=paged and queue == "continuous", block_size=block_size)
         self.gen = GenerationParams(max_new_tokens=max_new_tokens,
                                     eos_id=EOS)
         index_kw = {"nprobe": nprobe} if index_kind == "ivf" else {}
@@ -177,23 +183,31 @@ class LiveEdgeNode:
         self.stats.retrieval_s += t_retrieval
 
         slot_key = jax.random.fold_in(self._key, self.stats.slots)
-        prompts = [build_prompt(q.question, c)
-                   for q, c in zip(queries, contexts)]
-        token_prompts = [self.tok.encode(p, bos=True) for p in prompts]
         done_s: Dict[int, float] = {}      # rid -> completion time in slot
         if self.queue_kind == "continuous":
-            queue = ContinuousQueue(self.engine, self.gen, key=slot_key)
-            rids = queue.submit_all(token_prompts)
+            # (tokens, prefix_len) submission: paged engines fork the
+            # shared retrieved-context prefix instead of re-prefilling
+            queue = ContinuousQueue(self.engine, self.gen, key=slot_key,
+                                    policy=self.admission)
+            cap = self.engine.cont_max_prompt_len(self.gen.max_new_tokens)
+            rids = []
+            for q, c in zip(queries, contexts):
+                toks, plen = split_prompt(q.question, c, self.tok, cap=cap)
+                rids.append(queue.submit(toks, prefix_len=plen))
             t0 = time.perf_counter()
             queue.run()
             self.stats.generate_s += time.perf_counter() - t0
             self.stats.waves += queue.stats.frames
             self.stats.refills += queue.stats.refills
+            self.stats.prefix_hits += queue.stats.prefix_hits
+            self.stats.prefix_misses += queue.stats.prefix_misses
             for rid in rids:
                 done_s[rid] = queue.result(rid).done_s
         else:
             queue = RequestQueue(self.engine, self.gen, key=slot_key)
-            rids = queue.submit_all(token_prompts)
+            rids = queue.submit_all(
+                self.tok.encode(build_prompt(q.question, c), bos=True)
+                for q, c in zip(queries, contexts))
             wave_elapsed: List[float] = []
             t0 = time.perf_counter()
             while queue.pending():
@@ -228,7 +242,8 @@ class LiveEdgeNode:
 
     def _make_queue(self, key=None):
         if self.queue_kind == "continuous":
-            return ContinuousQueue(self.engine, self.gen, key=key)
+            return ContinuousQueue(self.engine, self.gen, key=key,
+                                   policy=self.admission)
         return RequestQueue(self.engine, self.gen, key=key)
 
     def profile(self, calib_queries: int = 0) -> CapacityFunction:

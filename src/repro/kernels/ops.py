@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.paged_attention import paged_decode_attention_pallas
 from repro.kernels.topk_retrieval import ivf_topk_pallas, topk_pallas
 
 
@@ -36,6 +37,26 @@ def flash_attention(q, k, v, *, causal: bool = True,
     return flash_attention_pallas(
         q, k, v, causal=causal, window=window, softcap=softcap,
         q_block=q_block, kv_block=kv_block, interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "use_pallas"))
+def paged_decode_attention(q, k_pool, v_pool, block_tables, first, last, *,
+                           softcap: Optional[float] = None,
+                           use_pallas: Optional[bool] = None) -> jax.Array:
+    """Paged decode read: one query per row gathered through the block
+    table.  [B,H,hd] x pool [P,bs,KV,hd]^2 x tables [B,nb] -> [B,H,hd].
+
+    ``use_pallas=None`` resolves by backend: the TPU path runs the
+    PrefetchScalarGridSpec kernel; elsewhere the jnp oracle serves (the
+    interpreter would re-walk the grid per decode step)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return ref.paged_attention_ref(q, k_pool, v_pool, block_tables,
+                                       first, last, softcap=softcap)
+    return paged_decode_attention_pallas(
+        q, k_pool, v_pool, block_tables, first, last, softcap=softcap,
+        interpret=_default_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("k", "q_block", "d_block",

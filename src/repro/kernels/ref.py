@@ -40,6 +40,39 @@ def attention_ref(
     return o.reshape(B, H, Sq, hd).astype(q.dtype)
 
 
+def paged_attention_ref(
+    q: jax.Array,                 # [B, H, hd] one query per row
+    k_pool: jax.Array,            # [P, bs, KV, hd] block pool
+    v_pool: jax.Array,            # [P, bs, KV, hd]
+    block_tables: jax.Array,      # [B, nb] pool ids; -1 unallocated
+    first: jax.Array,             # [B] first valid abs position
+    last: jax.Array,              # [B] last valid abs position
+    *,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Oracle for the paged decode kernel: gather each row's blocks out
+    of the pool, mask by position validity ``first <= pos <= last`` (and
+    block allocation), f32 softmax; GQA broadcast.  -> [B, H, hd]."""
+    B, H, hd = q.shape
+    P, bs, KV, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    G = H // KV
+    tbl = jnp.clip(block_tables, 0, P - 1)
+    k = k_pool[tbl].reshape(B, nb * bs, KV, hd).astype(jnp.float32)
+    v = v_pool[tbl].reshape(B, nb * bs, KV, hd).astype(jnp.float32)
+    qf = q.astype(jnp.float32).reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qf, k) / math.sqrt(hd)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(nb * bs, dtype=jnp.int32)[None]
+    ok = jnp.repeat(block_tables >= 0, bs, axis=1)
+    mask = (pos >= first[:, None]) & (pos <= last[:, None]) & ok
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v)
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
 def topk_ref(queries: jax.Array, docs: jax.Array, k: int
              ) -> Tuple[jax.Array, jax.Array]:
     """queries [Nq, D], docs [Nd, D] -> (scores [Nq,k], idx [Nq,k]);

@@ -61,7 +61,8 @@ def build_cluster(n_nodes: int, *, smoke: bool = True, entities: int = 8,
                   cache: bool = False, federated: bool = False,
                   fanout: int = 2, sketch_centroids: int = 8,
                   ckpt=None, queue: str = "continuous",
-                  prefill_chunk: int = 32):
+                  prefill_chunk: int = 32, paged: bool = False,
+                  block_size: int = 16, admission: str = "fifo"):
     """Corpus + tokenizer + N live nodes + PPO identifier.  Returns
     (nodes, workload-ready qas, tokenizer, encoder, identifier,
     coverage matrix).  ``ckpt`` loads ``examples/train_tiny.py``
@@ -105,7 +106,8 @@ def build_cluster(n_nodes: int, *, smoke: bool = True, entities: int = 8,
             max_new_tokens=new_tokens, seed=seed + 10 * n,
             index_kind=index_kind, nprobe=nprobe,
             cache=SemanticQueryCache() if cache else None,
-            queue=queue, prefill_chunk=prefill_chunk))
+            queue=queue, prefill_chunk=prefill_chunk,
+            paged=paged, block_size=block_size, admission=admission))
     if federated:
         enable_federation(nodes, fanout=fanout,
                           n_centroids=sketch_centroids, seed=seed)
@@ -160,6 +162,16 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="prompt chunk size of the continuous prefill "
                          "program")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: block-table rows + shared "
+                         "retrieved-context prefix forking (continuous "
+                         "queue only)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV tokens per pool block (--paged)")
+    ap.add_argument("--admission", default="fifo",
+                    choices=["fifo", "sjf"],
+                    help="continuous-queue admission policy: FIFO-with-"
+                         "skip or shortest-prefill-first")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -174,7 +186,9 @@ def main():
         update_threshold=max(4, args.per_slot),
         index_kind=args.index, nprobe=args.nprobe, cache=args.cache,
         federated=args.federated, fanout=args.fanout, ckpt=args.ckpt,
-        queue=args.queue, prefill_chunk=args.prefill_chunk)
+        queue=args.queue, prefill_chunk=args.prefill_chunk,
+        paged=args.paged, block_size=args.block_size,
+        admission=args.admission)
     print("corpus coverage per node:\n", np.round(cov, 2), flush=True)
     if args.federated:
         fed = nodes[0].federation

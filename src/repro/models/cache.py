@@ -21,10 +21,11 @@ is updated in place — the model stack never rebuilds the stacks.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import ssm
@@ -193,5 +194,247 @@ def write_token(kv_cache: dict, k: jax.Array, v: jax.Array,
     def put(buf, tok):
         return jax.lax.dynamic_update_slice(
             buf, tok[None].astype(buf.dtype), (cyc, zero, j, zero, zero))
+
+    return {"k": put(kv_cache["k"], k), "v": put(kv_cache["v"], v)}
+
+
+# --------------------------------------------------------------------------
+# paged KV cache: fixed-size blocks + per-row block tables
+#
+# Paged cache layout (ServeEngine(paged=True)):
+#
+#   cache = {
+#     "length": int32[B]               # per-row tokens absorbed
+#     "first":  int32[B]               # per-row first valid abs position
+#     "block_tables": int32[B, NB]     # pool block id per row block; -1 free
+#     "slots": {...}                   # "attn" slots POOLED [nc, P, bs, KV, hd]
+#                                      # rolling/recurrent slots per-row as in
+#                                      # init_cache
+#     "enc": {...}                     # unchanged
+#   }
+#
+# Row r's absolute position p lives in pool block ``block_tables[r, p//bs]``
+# at offset ``p % bs``.  ``length`` is per-row, so admitting a new request
+# into one row never advances any other row's position stream — the
+# drain-and-restart of the cycle-stacked layout disappears and capacity
+# becomes "are there free blocks", tracked host-side by BlockAllocator.
+#
+# Invalid writes (pads, finished rows, unallocated blocks) are routed to a
+# *positive* out-of-bounds scatter index and dropped with mode="drop".
+# A negative sentinel would be wrong: JAX wraps negative dynamic indices
+# (idx < 0 -> idx + n), which would silently corrupt the last block.
+
+
+class BlockAllocator:
+    """Host-side fixed-size KV-block allocator with reference counts.
+
+    Pure numpy/python bookkeeping — block *contents* live in the jit'd
+    cache pools; this object only decides which pool rows are live.
+    ``fork`` increments refcounts for prefix sharing; a block returns to
+    the free list when its refcount reaches zero."""
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 1:
+            raise ValueError(f"num_blocks={num_blocks} must be >= 1")
+        self.num_blocks = int(num_blocks)
+        self.refcount = np.zeros((self.num_blocks,), np.int32)
+        # stack: pop() hands out low ids first
+        self._free = list(range(self.num_blocks - 1, -1, -1))
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise MemoryError(
+                f"KV pool exhausted: need {n} blocks, "
+                f"{len(self._free)}/{self.num_blocks} free")
+        ids = [self._free.pop() for _ in range(n)]
+        for i in ids:
+            self.refcount[i] = 1
+        return ids
+
+    def free(self, ids: Sequence[int]) -> None:
+        for i in ids:
+            i = int(i)
+            if self.refcount[i] <= 0:
+                raise ValueError(f"double free of block {i}")
+            self.refcount[i] -= 1
+            if self.refcount[i] == 0:
+                self._free.append(i)
+
+    def fork(self, ids: Sequence[int]) -> List[int]:
+        """Share ``ids`` with one more owner (copy-on-write fork)."""
+        out = []
+        for i in ids:
+            i = int(i)
+            if self.refcount[i] <= 0:
+                raise ValueError(f"fork of free block {i}")
+            self.refcount[i] += 1
+            out.append(i)
+        return out
+
+
+def paged_slot_names(cfg: ModelConfig) -> List[str]:
+    """Slots whose K/V goes through the shared block pool (full
+    attention only; rolling windows stay per-row — their live span is
+    already O(window))."""
+    return [name for name, kind in slot_kinds(cfg) if kind == "attn"]
+
+
+def num_row_blocks(max_len: int, block_size: int) -> int:
+    return -(-max_len // block_size)
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     block_size: int, num_blocks: int,
+                     dtype=jnp.bfloat16) -> dict:
+    """Paged variant of ``init_cache``: "attn" slots become a shared
+    pool of ``num_blocks`` blocks of ``block_size`` tokens, addressed
+    through per-row block tables; everything else keeps the per-row
+    layout (and gains nothing but the per-row ``length``)."""
+    nc = n_cycles(cfg)
+    hd = cfg.resolved_head_dim
+    KV = cfg.num_kv_heads
+    NB = num_row_blocks(max_len, block_size)
+
+    dense = init_cache(cfg, batch, max_len, dtype)
+    slots = dict(dense["slots"])
+    for name in paged_slot_names(cfg):
+        slots[name] = {
+            "k": jnp.zeros((nc, num_blocks, block_size, KV, hd), dtype),
+            "v": jnp.zeros((nc, num_blocks, block_size, KV, hd), dtype),
+        }
+    cache = {"length": jnp.zeros((batch,), jnp.int32),
+             "first": jnp.zeros((batch,), jnp.int32),
+             "block_tables": jnp.full((batch, NB), -1, jnp.int32),
+             "slots": slots}
+    if "enc" in dense:
+        cache["enc"] = dense["enc"]
+    return cache
+
+
+def _pool_flat_index(table: jax.Array, abs_pos: jax.Array,
+                     block_size: int, pool_blocks: int) -> jax.Array:
+    """Flat [P*bs] scatter index for absolute positions ``abs_pos``
+    ([B] or [B,S]; -1 = invalid) through block table ``table`` [B,NB].
+    Invalid positions (negative, beyond the table, unallocated block)
+    map to the positive OOB sentinel ``P*bs`` and are dropped by
+    mode="drop" scatters."""
+    NB = table.shape[1]
+    pos2d = abs_pos if abs_pos.ndim == 2 else abs_pos[:, None]
+    col = jnp.clip(pos2d // block_size, 0, NB - 1)
+    blk = jnp.take_along_axis(table, col, axis=1)
+    valid = (pos2d >= 0) & (pos2d < NB * block_size) & (blk >= 0)
+    idx = jnp.where(valid, blk * block_size + pos2d % block_size,
+                    pool_blocks * block_size)
+    return idx if abs_pos.ndim == 2 else idx[:, 0]
+
+
+def paged_write_token(kv_cache: dict, k: jax.Array, v: jax.Array,
+                      pos: jax.Array, table: jax.Array, cycle: jax.Array,
+                      active: Optional[jax.Array] = None) -> dict:
+    """Scatter one [B,1,KV,hd] token per row at per-row absolute
+    position ``pos`` [B] into cycle ``cycle`` of the pooled
+    [nc,P,bs,KV,hd] buffers.  Rows with ``active`` False (frozen /
+    finished) write nowhere."""
+    nc, P, bs, KV, hd = kv_cache["k"].shape
+    idx = _pool_flat_index(table, pos.astype(jnp.int32), bs, P)
+    if active is not None:
+        idx = jnp.where(active, idx, P * bs)
+
+    def put(buf, tok):
+        # scatter straight into the [nc, P*bs, ...] view: extracting the
+        # cycle slice and writing it back would copy the whole pool
+        # (O(P) per decode step instead of O(B))
+        flat = buf.reshape(nc, P * bs, KV, hd)
+        flat = flat.at[cycle, idx].set(tok[:, 0].astype(buf.dtype),
+                                       mode="drop")
+        return flat.reshape(nc, P, bs, KV, hd)
+
+    return {"k": put(kv_cache["k"], k), "v": put(kv_cache["v"], v)}
+
+
+def paged_write_seq(kv_cache: dict, k: jax.Array, v: jax.Array,
+                    abs_pos: jax.Array, table: jax.Array,
+                    cycle: jax.Array) -> dict:
+    """Scatter a [B,S,KV,hd] prefill segment at per-token absolute
+    positions ``abs_pos`` [B,S] (-1 = pad / invalid) into the pooled
+    buffers through ``table``."""
+    nc, P, bs, KV, hd = kv_cache["k"].shape
+    B, S = abs_pos.shape
+    idx = _pool_flat_index(table, abs_pos.astype(jnp.int32), bs, P)
+
+    def put(buf, seg):
+        # direct [nc, P*bs, ...] scatter (see paged_write_token)
+        flat = buf.reshape(nc, P * bs, KV, hd)
+        flat = flat.at[cycle, idx.reshape(-1)].set(
+            seg.reshape(B * S, KV, hd).astype(buf.dtype), mode="drop")
+        return flat.reshape(nc, P, bs, KV, hd)
+
+    return {"k": put(kv_cache["k"], k), "v": put(kv_cache["v"], v)}
+
+
+def paged_gather_kv(kv_cache: dict, table: jax.Array, cycle: jax.Array,
+                    nb_cap: int):
+    """Gather the first ``nb_cap`` table columns of every row out of the
+    pool: -> (k, v) each [B, nb_cap*bs, KV, hd].  Unallocated (-1)
+    entries gather block 0; callers must mask them out by position
+    validity (they only cover positions >= the row's length)."""
+    nc, P, bs, KV, hd = kv_cache["k"].shape
+    tbl = jnp.clip(table[:, :nb_cap], 0, P - 1)
+
+    def take(buf):
+        g = buf[cycle, tbl]                        # [B, nb_cap, bs, KV, hd]
+        return g.reshape(tbl.shape[0], nb_cap * bs, KV, hd)
+
+    return take(kv_cache["k"]), take(kv_cache["v"])
+
+
+def rolling_write_token(kv_cache: dict, k: jax.Array, v: jax.Array,
+                        pos: jax.Array, cycle: jax.Array,
+                        active: Optional[jax.Array] = None) -> dict:
+    """Per-row rolling write: one [B,1,KV,hd] token at per-row absolute
+    position ``pos`` [B] into slot ``pos % W`` of the per-row
+    [nc,B,W,KV,hd] rolling buffers (paged mode: rows advance
+    independently, so the shared-position ``write_token`` is wrong)."""
+    nc, B, W, KV, hd = kv_cache["k"].shape
+    slot = (pos % W).astype(jnp.int32)
+    if active is not None:
+        slot = jnp.where(active, slot, W)          # W = positive OOB -> drop
+
+    def put(buf, tok):
+        sl = jax.lax.dynamic_index_in_dim(buf, cycle, 0, keepdims=False)
+        sl = sl.at[jnp.arange(B), slot].set(
+            tok[:, 0].astype(buf.dtype), mode="drop")
+        return jax.lax.dynamic_update_slice_in_dim(buf, sl[None], cycle, 0)
+
+    return {"k": put(kv_cache["k"], k), "v": put(kv_cache["v"], v)}
+
+
+def rolling_write_seq(kv_cache: dict, k: jax.Array, v: jax.Array,
+                      abs_pos: jax.Array, cycle: jax.Array) -> dict:
+    """Per-row masked rolling write of a [B,S,KV,hd] segment at absolute
+    positions ``abs_pos`` [B,S] (-1 = invalid); token p lands in slot
+    ``p % W``.  When a row carries more than W valid tokens in one
+    segment, only the last W survive (earlier ones are masked out so
+    same-slot scatter duplicates cannot race)."""
+    nc, B, W, KV, hd = kv_cache["k"].shape
+    S = abs_pos.shape[1]
+    pos = abs_pos.astype(jnp.int32)
+    last = jnp.max(jnp.where(pos >= 0, pos, -1), axis=1, keepdims=True)
+    valid = (pos >= 0) & (pos > last - W)
+    slot = jnp.where(valid, pos % W, W)            # W = positive OOB -> drop
+    rows = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S))
+
+    def put(buf, seg):
+        sl = jax.lax.dynamic_index_in_dim(buf, cycle, 0, keepdims=False)
+        sl = sl.at[rows.reshape(-1), slot.reshape(-1)].set(
+            seg.reshape(B * S, KV, hd).astype(buf.dtype), mode="drop")
+        return jax.lax.dynamic_update_slice_in_dim(buf, sl[None], cycle, 0)
 
     return {"k": put(kv_cache["k"], k), "v": put(kv_cache["v"], v)}

@@ -23,6 +23,7 @@ import jax.ad_checkpoint
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops as kernel_ops
 from repro.models import cache as cache_lib
 from repro.models import layers as L
 from repro.models import moe as moe_lib
@@ -196,35 +197,95 @@ class Model:
             return jnp.where(kv_pos >= first[:, None], kv_pos, -1)
         return kv_pos
 
+    @staticmethod
+    def _positions_vec(start, L_buf, window):
+        """Per-slot absolute positions for a buffer read with *per-row*
+        lengths ``start`` [B] (paged mode) -> [B, L_buf]."""
+        if window is not None and L_buf == window:
+            return cache_lib.rolling_kv_positions(start[:, None], L_buf)
+        return cache_lib.full_kv_positions(start[:, None], L_buf)
+
     def _cached_seq_attention(self, q, k, v, kv_stack, cycle, start, qpos,
-                              window, first, pos_shift):
+                              window, first, pos_shift, ctx=None):
         """Chunk-mode attention: the segment's queries attend to (cached
         past ⊕ current segment), then the segment's K/V are persisted —
         so a prompt is absorbed through one static [B, C] program C
-        tokens at a time.  Returns (attn, new_kv_stack)."""
+        tokens at a time.  Returns (attn, new_kv_stack).
+
+        Paged mode (``ctx["paged"]``): ``start`` is per-row [B]; full
+        "attn" slots live in the shared block pool and are read through
+        the row's block table / written by absolute-position scatter;
+        rolling slots keep the per-row buffer but index it per row
+        (rows advance independently, so the shared-position write path
+        would interleave them)."""
         cfg = self.cfg
-        k_buf, v_buf = _capped_cycle_slice(kv_stack, cycle, None)
-        B, L_buf = k_buf.shape[0], k_buf.shape[1]
-        if window is not None and L_buf == window:
-            past = cache_lib.rolling_kv_positions(start, L_buf)
+        paged = ctx is not None and ctx.get("paged")
+        B, S = q.shape[0], q.shape[1]
+        if paged:
+            # pads (qpos == -1) scatter nowhere; real tokens land at
+            # their absolute position first + relative
+            abs_write = jnp.where(qpos >= 0, qpos + pos_shift[:, None], -1)
+            if window is None:
+                tables = ctx["tables"]
+                NB = tables.shape[1]
+                bs = kv_stack["k"].shape[2]
+                k_buf, v_buf = cache_lib.paged_gather_kv(
+                    kv_stack, tables, cycle, NB)
+                L_buf = NB * bs
+                past = cache_lib.full_kv_positions(start[:, None], L_buf)
+                new_kv = cache_lib.paged_write_seq(kv_stack, k, v,
+                                                   abs_write, tables, cycle)
+            else:
+                k_buf, v_buf = _capped_cycle_slice(kv_stack, cycle, None)
+                L_buf = k_buf.shape[1]
+                past = self._positions_vec(start, L_buf, window)
+                new_kv = cache_lib.rolling_write_seq(kv_stack, k, v,
+                                                     abs_write, cycle)
+            past = self._buffer_positions(past, B, None, pos_shift)
         else:
-            past = cache_lib.full_kv_positions(start, L_buf)
-        past = self._buffer_positions(past, B, first, pos_shift)
+            k_buf, v_buf = _capped_cycle_slice(kv_stack, cycle, None)
+            L_buf = k_buf.shape[1]
+            if window is not None and L_buf == window:
+                past = cache_lib.rolling_kv_positions(start, L_buf)
+            else:
+                past = cache_lib.full_kv_positions(start, L_buf)
+            past = self._buffer_positions(past, B, first, pos_shift)
+            new_kv = cache_lib.write_seq(kv_stack, k, v, start, cycle)
         k_all = jnp.concatenate([k_buf, k.astype(k_buf.dtype)], axis=1)
         v_all = jnp.concatenate([v_buf, v.astype(v_buf.dtype)], axis=1)
         kv_pos = jnp.concatenate([past, qpos], axis=1)
-        S = q.shape[1]
         a = L.flash_attention(q, k_all, v_all, qpos, kv_pos, causal=True,
                               window=window,
                               softcap=cfg.attn_logit_softcap,
                               q_block=min(512, S),
                               kv_block=min(512, L_buf + S))
-        new_kv = cache_lib.write_seq(kv_stack, k, v, start, cycle)
         return a, new_kv
+
+    def _paged_decode_attn(self, q, kv_stack, cycle, start, tables, nb_cap,
+                           pos_shift, softcap=None):
+        """Paged decode read for a pooled "attn" slot: write the token
+        into its block (frozen rows scatter nowhere), then attend
+        through the first ``nb_cap`` block-table columns via the paged
+        attention kernel/oracle — O(live blocks), not O(max_len).
+        ``start`` [B] is per-row; valid slots are first <= pos <= start
+        (start is the just-written position).  Returns attn [B,1,H,hd];
+        the write happens in the caller (needs k/v)."""
+        # view the cycle-stacked pool as one [nc*P, bs, KV, hd] pool and
+        # offset the tables into the live cycle's stripe — extracting the
+        # cycle slice would copy the whole pool every decode step
+        nc, P = kv_stack["k"].shape[:2]
+        k_pool = kv_stack["k"].reshape((nc * P,) + kv_stack["k"].shape[2:])
+        v_pool = kv_stack["v"].reshape((nc * P,) + kv_stack["v"].shape[2:])
+        tbl = tables[:, :nb_cap]
+        tbl = jnp.where(tbl >= 0, tbl + cycle * P, -1)
+        a = kernel_ops.paged_decode_attention(
+            q[:, 0], k_pool, v_pool, tbl,
+            pos_shift, start, softcap=softcap)
+        return a[:, None]
 
     def _attn_sublayer(self, p, x, kind, qpos, kpos, angles, kv_stack, mode,
                        start, cycle, first=None, kv_cap=None,
-                       pos_shift=None):
+                       pos_shift=None, ctx=None):
         """Self-attention sublayer.  ``kv_stack`` holds the cycle-stacked
         KV buffers ([nc,B,L,KV,hd] leaves); writes land in cycle
         ``cycle``.  Returns (delta_x, new_kv_stack)."""
@@ -232,7 +293,28 @@ class Model:
         h = L.apply_norm(p["ln1"], x, cfg)
         q, k, v = L.qkv_project(p["attn"], h, cfg, angles)
         window = cfg.sliding_window if kind in ("local", "hymba") else None
-        if mode == "decode":
+        paged = ctx is not None and ctx.get("paged")
+        if mode == "decode" and paged:
+            # per-row positions: start [B] is each row's write position
+            active = ctx.get("active")
+            if window is None:
+                new_kv = cache_lib.paged_write_token(
+                    kv_stack, k, v, start, ctx["tables"], cycle, active)
+                a = self._paged_decode_attn(
+                    q, new_kv, cycle, start, ctx["tables"], ctx["nb_cap"],
+                    pos_shift, softcap=cfg.attn_logit_softcap)
+            else:
+                new_kv = cache_lib.rolling_write_token(
+                    kv_stack, k, v, start, cycle, active)
+                k_buf, v_buf = _capped_cycle_slice(new_kv, cycle, None)
+                kv_pos = self._positions_vec(start + 1, k_buf.shape[1],
+                                             window)
+                kv_pos = self._buffer_positions(kv_pos, x.shape[0], None,
+                                                pos_shift)
+                a = L.decode_attention(q, k_buf, v_buf, qpos[:, 0], kv_pos,
+                                       window=window,
+                                       softcap=cfg.attn_logit_softcap)
+        elif mode == "decode":
             new_kv = cache_lib.write_token(kv_stack, k, v, start, cycle)
             k_buf, v_buf = _capped_cycle_slice(new_kv, cycle, kv_cap)
             L_buf = k_buf.shape[1]
@@ -252,7 +334,7 @@ class Model:
         elif mode == "chunk":
             a, new_kv = self._cached_seq_attention(
                 q, k, v, kv_stack, cycle, start, qpos, window, first,
-                pos_shift)
+                pos_shift, ctx=ctx)
         else:
             S = x.shape[1]
             a = L.flash_attention(
@@ -320,7 +402,7 @@ class Model:
             da, new_kv = self._attn_sublayer(
                 p, x, kind, ctx["qpos"], ctx["kpos"], ctx["angles"],
                 cache_stack, mode, ctx["start"], cyc, ctx.get("first"),
-                ctx.get("kv_cap"), ctx.get("pos_shift"))
+                ctx.get("kv_cap"), ctx.get("pos_shift"), ctx=ctx)
             # checkpoint_name lets the remat policy SAVE this psum
             # output instead of re-all-reducing it in the backward
             # recompute (§Perf iteration 4)
@@ -332,7 +414,22 @@ class Model:
             h = L.apply_norm(p["ln1"], x, cfg)
             # attention branch (bypasses ln1 in _attn_sublayer; replicate here)
             q, k, v = L.qkv_project(p["attn"], h, cfg, ctx["angles"])
-            if mode == "decode":
+            if mode == "decode" and ctx.get("paged"):
+                # per-row rolling write/read (rows advance independently)
+                new_kv = cache_lib.rolling_write_token(
+                    kv, k, v, ctx["start"], cyc, ctx.get("active"))
+                k_buf, v_buf = _capped_cycle_slice(new_kv, cyc, None)
+                kv_pos = self._buffer_positions(
+                    self._positions_vec(ctx["start"] + 1, k_buf.shape[1],
+                                        cfg.sliding_window),
+                    x.shape[0], None, ctx.get("pos_shift"))
+                a = L.decode_attention(q, k_buf, v_buf,
+                                       ctx["qpos"][:, 0], kv_pos,
+                                       window=cfg.sliding_window)
+                mo, mstate = ssm.mamba_step(
+                    p["mamba"], h, cfg,
+                    cache_lib.take_cycle(cache_stack["mamba"], cyc))
+            elif mode == "decode":
                 new_kv = cache_lib.write_token(kv, k, v, ctx["start"], cyc)
                 k_buf, v_buf = _capped_cycle_slice(new_kv, cyc,
                                                    ctx.get("kv_cap"))
@@ -350,7 +447,7 @@ class Model:
                 a, new_kv = self._cached_seq_attention(
                     q, k, v, kv, cyc, ctx["start"], ctx["qpos"],
                     cfg.sliding_window, ctx.get("first"),
-                    ctx.get("pos_shift"))
+                    ctx.get("pos_shift"), ctx=ctx)
                 mo, mstate = ssm.mamba_forward(
                     p["mamba"], h, cfg,
                     cache_lib.take_cycle(cache_stack["mamba"], cyc),
@@ -580,14 +677,26 @@ class Model:
             "pos_shift": cache["first"],
             "seq_mask": pos2d >= 0,
         }
+        if "block_tables" in cache:      # paged: per-row length [B]
+            ctx["paged"] = True
+            ctx["tables"] = cache["block_tables"]
         if cfg.is_encoder_decoder:
             ctx["enc_out"] = self.encode(params, batch["encoder_frames"])
         x, aux, cache = self._run_stack(params, x, ctx, cache, "chunk")
         cache["length"] = cache["length"] + S
-        return self._logits(params, x[:, -1]), cache
+        last_col = batch.get("last_col")
+        if last_col is not None:
+            # right-padded chunks (prefix-fork suffix): the row's last
+            # real token sits at a per-row column, not column -1
+            xl = x[jnp.arange(x.shape[0]), last_col]
+        else:
+            xl = x[:, -1]
+        return self._logits(params, xl), cache
 
     def decode_step(self, params, token: jax.Array, cache: dict,
-                    kv_cap: Optional[int] = None, relative: bool = False
+                    kv_cap: Optional[int] = None, relative: bool = False,
+                    nb_cap: Optional[int] = None,
+                    active: Optional[jax.Array] = None
                     ) -> Tuple[jax.Array, dict]:
         """token: [B,1] int32. One serve_step: logits for the next token.
 
@@ -601,9 +710,19 @@ class Model:
         ``prefill_chunk``: each row's position is its live token count
         (``length - first[row]``), and buffer slots before the row's
         first token go negative (invalid) instead of being masked by
-        ``first`` — the continuous-batching decode mode."""
+        ``first`` — the continuous-batching decode mode.
+
+        Paged caches (``"block_tables"`` present) carry per-row
+        ``length`` [B]: pooled "attn" slots write into their block and
+        read through the first ``nb_cap`` (static) block-table columns;
+        rows with ``active`` False (finished) neither write nor advance
+        their length, so one row's decode never disturbs another's
+        position stream.  Requires ``relative=True``."""
         cfg = self.cfg
         B = token.shape[0]
+        paged = "block_tables" in cache
+        if paged and not relative:
+            raise ValueError("paged decode_step requires relative=True")
         pos_scalar = cache["length"]
         if relative:
             pos = (pos_scalar - cache["first"])[:, None].astype(jnp.int32)
@@ -622,6 +741,14 @@ class Model:
             "pos_shift": cache["first"] if relative else None,
             "kv_cap": kv_cap,
         }
+        if paged:
+            nb_total = cache["block_tables"].shape[1]
+            ctx["paged"] = True
+            ctx["tables"] = cache["block_tables"]
+            ctx["nb_cap"] = nb_total if nb_cap is None \
+                else min(nb_cap, nb_total)
+            ctx["active"] = active
         x, _, cache = self._run_stack(params, x, ctx, cache, "decode")
-        cache = dict(cache, length=cache["length"] + 1)
+        inc = 1 if active is None else active.astype(jnp.int32)
+        cache = dict(cache, length=cache["length"] + inc)
         return self._logits(params, x[:, 0]), cache

@@ -146,7 +146,18 @@ def mamba_forward(params, x: jax.Array, cfg: ModelConfig,
     Wm1 = cfg.ssm.conv_width - 1
     prev = state["conv"].astype(xi.dtype) if state is not None else \
         jnp.zeros((B, Wm1, inner), xi.dtype)
-    conv_hist = jnp.concatenate([prev, xi], axis=1)[:, -Wm1:] if Wm1 else xi[:, :0]
+    if not Wm1:
+        conv_hist = xi[:, :0]
+    elif mask is None:
+        conv_hist = jnp.concatenate([prev, xi], axis=1)[:, -Wm1:]
+    else:
+        # the tail slice must end at the last *valid* column: right-pad
+        # columns are masked zeros, and slicing past them would wipe the
+        # real history (prefix-fork suffix chunks are right-padded)
+        ext = jnp.concatenate([prev, xi], axis=1)       # [B, Wm1+S, inner]
+        end = jnp.max(jnp.where(mask, jnp.arange(1, S + 1)[None], 0), axis=1)
+        idx = end[:, None] + jnp.arange(Wm1)[None]      # ext[end : end+Wm1]
+        conv_hist = jnp.take_along_axis(ext, idx[..., None], axis=1)
     return out, {"h": h, "conv": conv_hist}
 
 

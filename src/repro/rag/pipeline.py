@@ -22,7 +22,7 @@ from repro.retrieval.encoder import TextEncoder
 from repro.retrieval.index import VectorIndex
 from repro.serving.engine import ServeEngine
 from repro.serving.sampling import GenerationParams
-from repro.serving.scheduler import RequestQueue
+from repro.serving.scheduler import ContinuousQueue, RequestQueue
 
 
 @dataclass
@@ -38,11 +38,34 @@ def build_prompt(question: str, contexts: Sequence[str]) -> str:
     return f"context : {ctx} <sep> question : {question} <sep> answer :"
 
 
+def split_prompt(question: str, contexts: Sequence[str], tok: Tokenizer,
+                 *, cap: Optional[int] = None) -> Tuple[List[int], int]:
+    """Tokenize a RAG prompt as (tokens, prefix_len): the prefix covers
+    the shared retrieved-context part (``context : ... <sep>``, BOS
+    included), which is the shared-prefix cache key — every question
+    against the same top-k contexts produces the *same* prefix tokens
+    (the word tokenizer splits on whitespace, so concatenating the
+    prefix and question-suffix encodings equals encoding the joined
+    prompt).  When ``cap`` bounds the servable prompt length, whole
+    lowest-ranked context documents are dropped — never split
+    mid-document — so truncation cannot destabilize the prefix hash."""
+    contexts = list(contexts)
+    suffix = tok.encode(f"question : {question} <sep> answer :")
+    while True:
+        prefix = tok.encode(f"context : {' '.join(contexts)} <sep>",
+                            bos=True)
+        if cap is None or len(prefix) + len(suffix) <= cap or not contexts:
+            break
+        contexts = contexts[:-1]
+    return prefix + suffix, len(prefix)
+
+
 class RAGPipeline:
     def __init__(self, encoder: TextEncoder, index: VectorIndex,
                  engine: ServeEngine, tokenizer: Tokenizer,
                  *, top_k: int = 5, max_new_tokens: int = 24,
-                 cache: Optional[SemanticQueryCache] = None):
+                 cache: Optional[SemanticQueryCache] = None,
+                 admission: str = "fifo"):
         self.encoder = encoder
         self.index = index
         self.engine = engine
@@ -50,6 +73,8 @@ class RAGPipeline:
         self.top_k = top_k
         self.max_new_tokens = max_new_tokens
         self.cache = cache
+        self.admission = admission
+        self.last_stats = None      # scheduler stats from the last answer()
 
     def retrieve(self, questions: Sequence[str]
                  ) -> Tuple[List[List[str]], np.ndarray]:
@@ -78,11 +103,25 @@ class RAGPipeline:
 
     def answer(self, questions: Sequence[str]) -> List[RAGResult]:
         contexts, scores = self.retrieve(questions)
-        prompts = [build_prompt(q, c) for q, c in zip(questions, contexts)]
-        queue = RequestQueue(self.engine, GenerationParams(
-            max_new_tokens=self.max_new_tokens, eos_id=EOS))
-        rids = queue.submit_all(self.tok.encode(p, bos=True) for p in prompts)
+        gp = GenerationParams(max_new_tokens=self.max_new_tokens,
+                              eos_id=EOS)
+        if self.engine.prefill_chunk is not None:
+            # continuous batching: submit (tokens, prefix_len) so paged
+            # engines fork repeated retrieved-context prefixes out of
+            # the session PrefixCache instead of re-prefilling them
+            queue = ContinuousQueue(self.engine, gp, policy=self.admission)
+            cap = self.engine.cont_max_prompt_len(gp.max_new_tokens)
+            rids = []
+            for q, c in zip(questions, contexts):
+                toks, plen = split_prompt(q, c, self.tok, cap=cap)
+                rids.append(queue.submit(toks, prefix_len=plen))
+        else:
+            queue = RequestQueue(self.engine, gp)
+            rids = queue.submit_all(
+                self.tok.encode(build_prompt(q, c), bos=True)
+                for q, c in zip(questions, contexts))
         outs = queue.run()
+        self.last_stats = queue.stats
         return [RAGResult(q, self.tok.decode(outs[rid]),
                           contexts[i], scores[i])
                 for i, (q, rid) in enumerate(zip(questions, rids))]

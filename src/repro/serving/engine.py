@@ -62,7 +62,9 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
                  batch_size: int = 8, pad_id: int = 0,
                  moe_capacity_factor: Optional[float] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 paged: bool = False, block_size: int = 16,
+                 num_blocks: Optional[int] = None):
         cf = moe_capacity_factor
         if cf is None and cfg.moe is not None:
             cf = float(cfg.moe.num_experts)   # dropless at serving sizes
@@ -72,6 +74,28 @@ class ServeEngine:
         self.max_len = max_len
         self.batch_size = batch_size
         self.pad_id = pad_id
+        # paged KV: full-attention K/V lives in a shared pool of
+        # ``num_blocks`` blocks of ``block_size`` tokens addressed
+        # through per-row block tables (see models/cache.py); rows then
+        # carry independent lengths, so ContinuousSession admits
+        # indefinitely instead of drain-and-restarting frames
+        self.paged = bool(paged)
+        self.block_size = int(block_size)
+        if self.paged:
+            if prefill_chunk is None:
+                raise ValueError("paged=True rides the continuous path; "
+                                 "build the engine with prefill_chunk=...")
+            if block_size < 1:
+                raise ValueError(f"block_size={block_size} must be >= 1")
+            self.nb_total = cache_lib.num_row_blocks(max_len, block_size)
+            # default pool: every row can hold a full-length context
+            self.num_blocks = int(num_blocks) if num_blocks is not None \
+                else batch_size * self.nb_total
+            self._pooled = cache_lib.paged_slot_names(cfg)
+            self._pooled_set = frozenset(self._pooled)
+            self._nonpooled = [n for n, _ in self.model.slots
+                               if n not in self._pooled_set]
+            self._zero_state = None
         # recurrent state absorbs pad embeddings -> exact-length padding
         self._exact_length = any(kind in _RECURRENT_KINDS
                                  for _, kind in self.model.slots)
@@ -100,7 +124,8 @@ class ServeEngine:
             self._prefill_chunk = jax.jit(self._prefill_chunk_impl,
                                           donate_argnums=(2,))
             self._decode_cont = jax.jit(self._decode_cont_impl,
-                                        static_argnames=("gp", "kv_cap"),
+                                        static_argnames=("gp", "kv_cap",
+                                                         "nb_cap"),
                                         donate_argnums=(2, 4, 5, 6, 7))
             # one fused dispatch per mid-frame refill: staging cache +
             # chunk scan + first-token sample + row swap + carry updates
@@ -108,6 +133,20 @@ class ServeEngine:
                                    static_argnames=("gp",),
                                    donate_argnums=(2, 3, 4, 5, 6))
             self._fresh_cache = jax.jit(self._fresh_cache_impl)
+        if self.paged:
+            self._paged_fresh_cache = jax.jit(self._paged_fresh_cache_impl)
+            self._paged_prefill_chunk = jax.jit(
+                self._paged_prefill_chunk_impl, donate_argnums=(2,))
+            # unified mid-frame admission (plain + prefix fork): the
+            # row_state snapshot (arg 11) is deliberately NOT donated —
+            # a prefix entry's snapshot forks into many rows
+            self._paged_refill = jax.jit(self._paged_refill_impl,
+                                         static_argnames=("gp",),
+                                         donate_argnums=(2, 3, 4, 5, 6))
+            self._paged_prefix_prefill = jax.jit(
+                self._paged_prefix_prefill_impl, donate_argnums=(2,))
+            self._paged_copy_block = jax.jit(self._paged_copy_block_impl,
+                                             donate_argnums=(0,))
 
     # ---------------------------------------------------------------- batching
 
@@ -242,21 +281,29 @@ class ServeEngine:
         cache["length"] = jnp.asarray(length0, jnp.int32)
         return cache
 
-    def _chunk_step(self, params, toks, cache):
+    def _chunk_step(self, params, toks, cache, l_end=None):
         """One [B, C] chunk of the chunked prefill: derive per-row
         RELATIVE positions (counted from ``cache['first']``, -1 at pads)
         at the cache's current absolute offset, then
         ``Model.prefill_chunk``.  The offset is traced, so every chunk
         of every prompt length reuses one compiled program per batch
-        shape."""
+        shape.  ``l_end`` (paged caches: per-row lengths, right-padded
+        chunk tails) additionally masks columns at/after the prompt end
+        and points the logits read at the last real column."""
         B, C = toks.shape
         first = cache["first"]
-        abs_pos = cache["length"] + jnp.arange(C, dtype=jnp.int32)[None, :]
-        pos = jnp.where(abs_pos >= first[:, None],
-                        abs_pos - first[:, None], -1)
+        abs_pos = jnp.reshape(cache["length"], (-1, 1)) \
+            + jnp.arange(C, dtype=jnp.int32)[None, :]
+        valid = abs_pos >= first[:, None]
+        if l_end is not None:
+            valid = valid & (abs_pos < l_end)
+        pos = jnp.where(valid, abs_pos - first[:, None], -1)
         if self.cfg.use_mrope:
             pos = jnp.broadcast_to(pos, (3, B, C))
         batch = {"tokens": toks, "positions": pos}
+        if l_end is not None:
+            batch["last_col"] = jnp.clip(
+                l_end - 1 - jnp.reshape(cache["length"], (-1,)), 0, C - 1)
         if self.cfg.is_encoder_decoder:
             batch["encoder_frames"] = jnp.zeros(
                 (B, self.cfg.encoder_seq_len, self.cfg.d_model),
@@ -300,9 +347,184 @@ class ServeEngine:
             idx, jnp.zeros((1,), idx.dtype), (slot,))
         return tok, cache, done, remaining, idx
 
+    # ------------------------------------------------- paged-KV programs
+
+    def _paged_fresh_cache_impl(self, first, lengths, tables):
+        """A zeroed paged cache with per-row first positions, lengths,
+        and block tables — the pool a session lives in."""
+        cache = cache_lib.init_paged_cache(
+            self.cfg, first.shape[0], self.max_len, self.block_size,
+            self.num_blocks, jnp.float32)
+        cache["first"] = first.astype(jnp.int32)
+        cache["length"] = lengths.astype(jnp.int32)
+        cache["block_tables"] = tables.astype(jnp.int32)
+        return cache
+
+    def _paged_prefill_chunk_impl(self, params, toks, cache, l_end):
+        return self._chunk_step(params, toks, cache, l_end=l_end)
+
+    def _paged_zero_row_state(self):
+        """Zeroed single-row non-pooled state (rolling/recurrent slots,
+        enc K/V): the ``row_state`` a plain (non-fork) paged refill
+        starts from.  Built once and reused — never donated."""
+        if self._zero_state is None:
+            full = self.model.init_cache(1, self.max_len, jnp.float32)
+            st = {"slots": {n: full["slots"][n] for n in self._nonpooled}}
+            if "enc" in full:
+                st["enc"] = full["enc"]
+            self._zero_state = st
+        return self._zero_state
+
+    def _paged_row_staging(self, cache, row_state, table_row, length0,
+                           first0):
+        """The 1-row staging cache of a paged admission: pooled slots
+        alias the live pool (chunk scatter-writes land directly in the
+        row's blocks via ``table_row``), non-pooled per-row slots come
+        from ``row_state`` (zeros, or a prefix snapshot)."""
+        slots = {}
+        for name, _ in self.model.slots:
+            if name in self._pooled_set:
+                slots[name] = cache["slots"][name]
+            else:
+                slots[name] = row_state["slots"][name]
+        stg = {"length": jnp.reshape(length0, (1,)).astype(jnp.int32),
+               "first": jnp.reshape(first0, (1,)).astype(jnp.int32),
+               "block_tables": table_row[None].astype(jnp.int32),
+               "slots": slots}
+        if "enc" in cache:
+            stg["enc"] = row_state["enc"]
+        return stg
+
+    def _paged_scan_chunks(self, params, toks, staging, l_end):
+        """Chunk-scan ``toks`` [1, k*C] through the staging row; returns
+        (last chunk's logits, staging)."""
+        C = self.prefill_chunk
+
+        def chunk(carry, j):
+            _, stg = carry
+            tc = jax.lax.dynamic_slice_in_dim(toks, j * C, C, axis=1)
+            logits, stg = self._chunk_step(params, tc, stg, l_end=l_end)
+            return (logits.astype(jnp.float32), stg), None
+
+        logits0 = jnp.zeros((1, self.cfg.vocab_size), jnp.float32)
+        (logits, staging), _ = jax.lax.scan(
+            chunk, (logits0, staging), jnp.arange(toks.shape[1] // C))
+        return logits, staging
+
+    def _paged_merge_staging(self, cache, staging, slot, l_end, first0,
+                             table_row):
+        """Fold a finished staging row back into the live cache: adopt
+        the pool (the scatter-writes already landed there), swap the
+        non-pooled per-row state into ``slot``, and point the slot's
+        table/length/first at the new request."""
+        new_slots = dict(cache["slots"])
+        for name in self._pooled:
+            new_slots[name] = staging["slots"][name]
+        cache = dict(cache, slots=new_slots)
+        dst = {"slots": {n: cache["slots"][n] for n in self._nonpooled},
+               "first": cache["first"]}
+        src = {"slots": {n: staging["slots"][n] for n in self._nonpooled},
+               "first": jnp.reshape(first0, (1,)).astype(jnp.int32)}
+        if "enc" in cache:
+            dst["enc"] = cache["enc"]
+            src["enc"] = staging["enc"]
+        dst = cache_lib.insert_row(dst, src, jnp.int32(0), slot)
+        merged = dict(cache["slots"])
+        merged.update(dst["slots"])
+        cache = dict(cache, slots=merged, first=dst["first"])
+        if "enc" in dst:
+            cache["enc"] = dst["enc"]
+        l1 = jnp.reshape(l_end, (1,)).astype(jnp.int32)
+        return dict(
+            cache,
+            length=jax.lax.dynamic_update_slice(cache["length"], l1,
+                                                (slot,)),
+            block_tables=jax.lax.dynamic_update_slice(
+                cache["block_tables"], table_row[None].astype(jnp.int32),
+                (slot, jnp.int32(0))))
+
+    def _paged_refill_impl(self, params, toks, tok, cache, done, remaining,
+                           idx, slot, budget, key, table_row, row_state,
+                           length0, l_end, first0, gp: GenerationParams):
+        """Fused paged admission — ONE dispatch for both flavors:
+
+        * plain: ``toks`` [1, padded] left-padded, ``length0 = 0``,
+          ``first0 = padded - p``, ``row_state`` zeros;
+        * prefix fork: ``toks`` [1, ceil(q/C)*C] right-padded question
+          suffix, ``length0 = L0`` (the cached prefix end), ``first0``
+          the prefix's pad offset, ``row_state`` the prefix snapshot;
+          ``table_row`` already shares the prefix's pool blocks.
+
+        Chunk-prefills into the staging row, samples the first token,
+        merges into ``slot`` and flips the decode carry live.  Only
+        traced scalars differ between flavors, so both compile once per
+        chunk count."""
+        staging = self._paged_row_staging(cache, row_state, table_row,
+                                          length0, first0)
+        logits, staging = self._paged_scan_chunks(params, toks, staging,
+                                                  l_end)
+        tok_new = sample_token(logits, gp, key, 0)
+        cache = self._paged_merge_staging(cache, staging, slot, l_end,
+                                          first0, table_row)
+        tok = jax.lax.dynamic_update_slice(tok, tok_new, (slot, 0))
+        done = jax.lax.dynamic_update_slice(
+            done, jnp.zeros((1,), done.dtype), (slot,))
+        remaining = jax.lax.dynamic_update_slice(
+            remaining, budget[None].astype(remaining.dtype), (slot,))
+        idx = jax.lax.dynamic_update_slice(
+            idx, jnp.zeros((1,), idx.dtype), (slot,))
+        return tok, cache, done, remaining, idx
+
+    def _paged_prefix_prefill_impl(self, params, toks, cache, table_row,
+                                   l_end, first0, row_state):
+        """Prefill a canonical retrieved-context prefix into its own
+        block run (no live row touched).  Returns the cache (the pool
+        now holds the prefix K/V) and the single-row snapshot of the
+        non-pooled state at the prefix end — everything a later fork
+        needs to resume from position ``l_end``."""
+        staging = self._paged_row_staging(cache, row_state, table_row,
+                                          jnp.int32(0), first0)
+        _, staging = self._paged_scan_chunks(params, toks, staging, l_end)
+        new_slots = dict(cache["slots"])
+        for name in self._pooled:
+            new_slots[name] = staging["slots"][name]
+        cache = dict(cache, slots=new_slots)
+        snap = {"slots": {n: staging["slots"][n] for n in self._nonpooled}}
+        if "enc" in staging:
+            snap["enc"] = staging["enc"]
+        return cache, snap
+
+    def _paged_copy_block_impl(self, cache, src, dst):
+        """Copy pool block ``src`` into ``dst`` for every pooled slot
+        (all cycles at once) — the copy-on-write step when a fork's
+        prefix ends mid-block."""
+        slots = dict(cache["slots"])
+        for name in self._pooled:
+            kv = slots[name]
+
+            def cp(buf):
+                blk = jax.lax.dynamic_slice_in_dim(buf, src, 1, axis=1)
+                return jax.lax.dynamic_update_slice_in_dim(buf, blk, dst,
+                                                           axis=1)
+
+            slots[name] = {"k": cp(kv["k"]), "v": cp(kv["v"])}
+        return dict(cache, slots=slots)
+
+    def _cont_nb_cap(self, high: int) -> int:
+        """Static block-table width for a paged decode segment: enough
+        blocks to cover the highest position the segment can reach,
+        rounded up to 4 blocks so distinct compiles stay bounded at
+        nb_total/4 per GenerationParams.  This is the paged analogue of
+        ``_cont_kv_cap`` — the decode read gathers ``nb_cap`` blocks, so
+        per-step cost tracks live tokens instead of ``max_len``."""
+        bs = self.block_size
+        nb = -(-min(high, self.nb_total * bs) // bs)
+        nb = -(-nb // 4) * 4
+        return max(1, min(self.nb_total, nb))
+
     def _decode_cont_impl(self, params, tok, cache, key, done, remaining,
                           idx, out, t0, drain, gp: GenerationParams,
-                          kv_cap=None):
+                          kv_cap=None, nb_cap=None):
         """Continuous decode segment: like ``_decode_loop_impl`` but
         with per-row ``remaining`` budgets and per-row output cursors
         ``idx``, exiting as soon as any row that was live at entry
@@ -338,8 +560,16 @@ class ServeEngine:
 
             def step(args):
                 tok, cache = args
-                logits, cache = self.model.decode_step(
-                    params, tok, cache, kv_cap=kv_cap, relative=True)
+                if self.paged:
+                    # finished rows must not touch the pool: their table
+                    # entries may point at blocks already freed and
+                    # re-allocated to live rows
+                    logits, cache = self.model.decode_step(
+                        params, tok, cache, relative=True, nb_cap=nb_cap,
+                        active=~done)
+                else:
+                    logits, cache = self.model.decode_step(
+                        params, tok, cache, kv_cap=kv_cap, relative=True)
                 return sample_token(logits, gp, key, t + 1), cache
 
             # survivors must leave the segment holding an un-recorded
@@ -351,9 +581,14 @@ class ServeEngine:
 
         t, tok, cache, done, remaining, idx, out = jax.lax.while_loop(
             cond, body, state)
-        summary = jnp.concatenate(
-            [done.astype(jnp.int32), idx,
-             jnp.stack([t, cache["length"]])])
+        if self.paged:
+            # per-row lengths: [done, idx, lengths, t] -> 3B + 1 ints
+            summary = jnp.concatenate(
+                [done.astype(jnp.int32), idx, cache["length"], t[None]])
+        else:
+            summary = jnp.concatenate(
+                [done.astype(jnp.int32), idx,
+                 jnp.stack([t, cache["length"]])])
         return tok, done, remaining, idx, out, cache, summary
 
     def cont_max_prompt_len(self, max_new_tokens: int) -> int:
@@ -375,9 +610,10 @@ class ServeEngine:
         cap = -(-min(self.max_len, high) // 32) * 32
         return min(self.max_len, max(cap, _MIN_BUCKET))
 
-    def continuous_session(self, gen: GenerationParams,
-                           key=None) -> "ContinuousSession":
-        return ContinuousSession(self, gen, key=key)
+    def continuous_session(self, gen: GenerationParams, key=None,
+                           prefix_cache=None) -> "ContinuousSession":
+        return ContinuousSession(self, gen, key=key,
+                                 prefix_cache=prefix_cache)
 
     def _route_empty_prompts(self, prompts, gen: GenerationParams, key,
                              generate_fn) -> Optional[List[List[int]]]:
@@ -511,7 +747,7 @@ class ContinuousSession:
     """
 
     def __init__(self, engine: ServeEngine, gen: GenerationParams, *,
-                 key=None):
+                 key=None, prefix_cache=None):
         if engine.prefill_chunk is None:
             raise ValueError("engine was built without prefill_chunk=..., "
                              "which continuous batching requires")
@@ -546,6 +782,24 @@ class ContinuousSession:
         self.frames = 0
         self.segments = 0
         self.refills = 0
+        # paged mode: host-side block bookkeeping.  ``lengths`` mirrors
+        # the per-row cache["length"]; ``_tables`` mirrors the rows'
+        # block tables so freed rows can return their blocks.
+        self.paged = engine.paged
+        self.prefix_cache = None
+        if engine.paged:
+            self.allocator = cache_lib.BlockAllocator(engine.num_blocks)
+            self.lengths = np.zeros(self.B, np.int64)
+            self._tables = np.full((self.B, engine.nb_total), -1, np.int32)
+            if prefix_cache is not None:
+                from repro.serving.prefix_cache import PrefixCache
+                if isinstance(prefix_cache, int):
+                    prefix_cache = PrefixCache(capacity=prefix_cache)
+                # an evicted entry returns its block refcounts; blocks
+                # forked into live rows survive through the rows' refs
+                prefix_cache.on_evict = \
+                    lambda e: self.allocator.free(e.block_ids)
+                self.prefix_cache = prefix_cache
 
     # ------------------------------------------------------------- geometry
 
@@ -558,13 +812,124 @@ class ContinuousSession:
     def active(self) -> bool:
         return bool((~self.done).any())
 
-    def can_refill(self, prompt_len: int, budget: int) -> bool:
+    def can_refill(self, prompt_len: int, budget: int,
+                   prefix_len: Optional[int] = None,
+                   prompt: Optional[Sequence[int]] = None) -> bool:
         """A request fits mid-frame iff its padded chunk frames fit
         *below* the current shared position (its tokens occupy
-        [length - p, length)) and its decode budget fits above."""
-        return (self.cache is not None
-                and self._padded(prompt_len) <= self.length
-                and self.length + budget <= self.eng.max_len)
+        [length - p, length)) and its decode budget fits above.
+
+        Paged sessions have no shared position: a request fits iff the
+        allocator can hand out its block run (LRU prefix entries are
+        evicted to make room), so admission continues indefinitely."""
+        if not self.paged:
+            return (self.cache is not None
+                    and self._padded(prompt_len) <= self.length
+                    and self.length + budget <= self.eng.max_len)
+        if self.cache is None:
+            return False
+        prefix = self._prefix_parts(prompt, prefix_len)
+        while True:
+            need = self._plan_blocks(prompt_len, budget, prefix)
+            if need is None:
+                return False
+            if self.allocator.can_alloc(need):
+                return True
+            if self.prefix_cache is None or not self.prefix_cache.evict_lru():
+                return False
+
+    def _prefix_parts(self, prompt, prefix_len) -> Optional[tuple]:
+        """The shareable context-prefix tokens of a request, or None
+        when the request takes the plain (no-fork) path.  At least one
+        token is always left on the question side so the refill has a
+        real suffix to prefill and sample from."""
+        if (not self.paged or self.prefix_cache is None or not prefix_len
+                or prompt is None):
+            return None
+        prefix_len = min(int(prefix_len), len(prompt) - 1)
+        if prefix_len <= 0:
+            return None
+        return tuple(prompt[:prefix_len])
+
+    def _plan_blocks(self, prompt_len: int, budget: int,
+                     prefix: Optional[tuple]) -> Optional[int]:
+        """Pool blocks a paged refill would newly allocate, or None when
+        the request's span can never fit one row (`> max_len`)."""
+        bs = self.eng.block_size
+        if prefix is None:
+            span = self._padded(prompt_len) + budget
+            if span > self.eng.max_len:
+                return None
+            return -(-span // bs)
+        p = len(prefix)
+        L0 = p + (-p) % self.C
+        span = L0 + (prompt_len - p) + budget
+        if span > self.eng.max_len:
+            return None
+        tot = -(-span // bs)
+        fork_new = tot - L0 // bs       # COW tail + fresh decode blocks
+        if self.prefix_cache.peek(prefix) is not None:
+            return fork_new
+        return -(-L0 // bs) + fork_new  # prefix prefill allocates too
+
+    def frame_capacity(self, requests: Sequence[Tuple[int, int]]) -> int:
+        """How many of the first ``requests`` [(prompt_len, budget)]
+        fit one frame — the FIFO prefix the queue should admit with
+        ``begin_frame``.  Non-paged frames are bounded by batch size
+        only; paged frames also need a block run per row (the prefix
+        cache is cleared at frame start, so its blocks count as free)."""
+        n = min(len(requests), self.B)
+        if not self.paged:
+            return n
+        bs = self.eng.block_size
+        avail = self.allocator.available
+        if self.prefix_cache is not None:
+            avail += self.prefix_cache.held_blocks()
+        fit = 0
+        for k in range(1, n + 1):
+            frame_len = self._padded(max(pl for pl, _ in requests[:k]))
+            if frame_len + max(b for _, b in requests[:k]) > self.eng.max_len:
+                break
+            need = sum(-(-(frame_len + b) // bs) for _, b in requests[:k])
+            if need > avail:
+                break
+            fit = k
+        return fit
+
+    def admission_cost(self, prompt_len: int, budget: int,
+                       prefix_len: Optional[int] = None,
+                       prompt: Optional[Sequence[int]] = None) -> int:
+        """Prefill chunks admitting this request would dispatch — the
+        shortest-prefill-first scheduling key.  A cached prefix skips
+        its own chunks entirely (only the question suffix prefills)."""
+        prefix = self._prefix_parts(prompt, prefix_len)
+        if prefix is not None:
+            p = len(prefix)
+            L0 = p + (-p) % self.C
+            q_chunks = -(-(prompt_len - p) // self.C)
+            if self.prefix_cache.peek(prefix) is not None:
+                return q_chunks
+            return L0 // self.C + q_chunks
+        return self._padded(prompt_len) // self.C
+
+    def _release_slot(self, slot: int) -> None:
+        """Return a row's pool blocks to the allocator (idempotent)."""
+        if not self.paged:
+            return
+        ids = self._tables[slot][self._tables[slot] >= 0]
+        if ids.size:
+            self.allocator.free(ids.tolist())
+        self._tables[slot] = -1
+
+    def release(self) -> None:
+        """Free every pool block held by rows and prefix entries; after
+        this ``allocator.available == num_blocks`` (the leak check)."""
+        if not self.paged:
+            return
+        for i in range(self.B):
+            self._release_slot(i)
+        if self.prefix_cache is not None:
+            self.prefix_cache.clear()
 
     # ------------------------------------------------------------ admission
 
@@ -588,9 +953,35 @@ class ContinuousSession:
         for i, p in enumerate(prompts):
             toks[i, frame_len - len(p):] = p
             first[i] = frame_len - len(p)
-        cache = self.eng._fresh_cache(jnp.asarray(first),
-                                      jnp.zeros((), jnp.int32))
-        logits, self.cache = self._chunked_prefill(cache, toks)
+        if self.paged:
+            # a fresh frame rebuilds the pool, invalidating any cached
+            # prefix content (paged sessions normally never get here
+            # twice: mid-stream admission goes through refill instead)
+            if self.prefix_cache is not None:
+                self.prefix_cache.clear()
+            for i in range(self.B):
+                self._release_slot(i)
+            bs = self.eng.block_size
+            tables = np.full((self.B, self.eng.nb_total), -1, np.int32)
+            for i in range(len(prompts)):
+                ids = self.allocator.alloc(-(-(frame_len + budgets[i]) // bs))
+                tables[i, :len(ids)] = ids
+            cache = self.eng._paged_fresh_cache(
+                jnp.asarray(first), jnp.zeros(self.B, jnp.int32),
+                jnp.asarray(tables))
+            logits = None
+            for j in range(frame_len // self.C):
+                logits, cache = self.eng._paged_prefill_chunk(
+                    self.eng.params,
+                    jnp.asarray(toks[:, j * self.C:(j + 1) * self.C]),
+                    cache, jnp.int32(frame_len))
+            self.cache = cache
+            self._tables = tables
+            self.lengths = np.full(self.B, frame_len, np.int64)
+        else:
+            cache = self.eng._fresh_cache(jnp.asarray(first),
+                                          jnp.zeros((), jnp.int32))
+            logits, self.cache = self._chunked_prefill(cache, toks)
         self.tok = sample_token(logits, self.gen,
                                 jax.random.fold_in(self.key, self.frames),
                                 0)
@@ -612,26 +1003,40 @@ class ContinuousSession:
         # is the semantic moment callers stamp TTFT at
         jax.block_until_ready(self.tok)
 
-    def refill(self, slot: int, prompt: Sequence[int], budget: int) -> None:
+    def refill(self, slot: int, prompt: Sequence[int], budget: int,
+               prefix_len: Optional[int] = None) -> None:
         """Swap ``prompt`` into finished slot ``slot`` mid-frame — one
         fused dispatch (``ServeEngine._refill``): staging chunk prefill
         ending at the current shared position, first-token sample, row
         insert, live carry update.  The slot resumes decoding with the
-        next segment."""
+        next segment.
+
+        Paged sessions allocate the row's block run here instead; when
+        ``prefix_len`` marks a retrieved-context prefix, its prefilled
+        blocks are forked from the ``PrefixCache`` (refcounted, COW on
+        a mid-block tail) and only the question suffix prefills."""
         p = len(prompt)
-        assert self.done[slot] and self.can_refill(p, budget), \
-            (slot, p, budget, self.length)
-        padded = self._padded(p)
-        toks = np.full((1, padded), self.eng.pad_id, np.int32)
-        toks[0, padded - p:] = list(prompt)
+        ok = self.can_refill(p, budget, prefix_len, prompt)
+        assert self.done[slot] and ok, (slot, p, budget, self.length)
         self.admitted += 1
-        (self.tok, self.cache, self._done_d, self._rem_d,
-         self._idx_d) = self.eng._refill(
-            self.eng.params, jnp.asarray(toks), self.tok, self.cache,
-            self._done_d, self._rem_d, self._idx_d, jnp.int32(slot),
-            jnp.int32(p), jnp.int32(budget),
-            jax.random.fold_in(self.key, 1000 + self.admitted),
-            gp=self.gen)
+        if self.paged:
+            self._release_slot(slot)
+            prefix = self._prefix_parts(prompt, prefix_len)
+            if prefix is not None:
+                self._refill_fork(slot, prompt, budget, prefix)
+            else:
+                self._refill_plain(slot, prompt, budget)
+        else:
+            padded = self._padded(p)
+            toks = np.full((1, padded), self.eng.pad_id, np.int32)
+            toks[0, padded - p:] = list(prompt)
+            (self.tok, self.cache, self._done_d, self._rem_d,
+             self._idx_d) = self.eng._refill(
+                self.eng.params, jnp.asarray(toks), self.tok, self.cache,
+                self._done_d, self._rem_d, self._idx_d, jnp.int32(slot),
+                jnp.int32(p), jnp.int32(budget),
+                jax.random.fold_in(self.key, 1000 + self.admitted),
+                gp=self.gen)
         self.done[slot] = False
         self.idx[slot] = 0
         self._budget[slot] = budget
@@ -639,6 +1044,84 @@ class ContinuousSession:
         # sync (async dispatch): the refilled row's first token exists
         # now — the TTFT stamp callers take must not lead the device
         jax.block_until_ready(self.tok)
+
+    def _dispatch_paged_refill(self, toks, slot, budget, table_row,
+                               row_state, length0, l_end, first0) -> None:
+        (self.tok, self.cache, self._done_d, self._rem_d,
+         self._idx_d) = self.eng._paged_refill(
+            self.eng.params, jnp.asarray(toks), self.tok, self.cache,
+            self._done_d, self._rem_d, self._idx_d, jnp.int32(slot),
+            jnp.int32(budget),
+            jax.random.fold_in(self.key, 1000 + self.admitted),
+            jnp.asarray(table_row), row_state, jnp.int32(length0),
+            jnp.int32(l_end), jnp.int32(first0), gp=self.gen)
+        self._tables[slot] = table_row
+        self.lengths[slot] = l_end
+
+    def _refill_plain(self, slot: int, prompt: Sequence[int],
+                      budget: int) -> None:
+        bs = self.eng.block_size
+        p = len(prompt)
+        padded = self._padded(p)
+        ids = self.allocator.alloc(-(-(padded + budget) // bs))
+        table_row = np.full(self.eng.nb_total, -1, np.int32)
+        table_row[:len(ids)] = ids
+        toks = np.full((1, padded), self.eng.pad_id, np.int32)
+        toks[0, padded - p:] = list(prompt)
+        self._dispatch_paged_refill(toks, slot, budget, table_row,
+                                    self.eng._paged_zero_row_state(),
+                                    0, padded, padded - p)
+
+    def _refill_fork(self, slot: int, prompt: Sequence[int], budget: int,
+                     prefix: tuple) -> None:
+        bs = self.eng.block_size
+        entry = self.prefix_cache.get(prefix)
+        if entry is None:
+            entry = self._prefill_prefix(prefix)
+            self.prefix_cache.put(prefix, entry)
+        suffix = list(prompt[len(prefix):])
+        q = len(suffix)
+        L0 = entry.length
+        tot = -(-(L0 + q + budget) // bs)
+        nfull = L0 // bs
+        row_ids = self.allocator.fork(entry.block_ids[:nfull])
+        if len(entry.block_ids) > nfull:
+            # the prefix ends mid-block: the fork gets a private copy of
+            # the tail block so its suffix writes never touch the entry
+            cow = self.allocator.alloc(1)
+            self.cache = self.eng._paged_copy_block(
+                self.cache, jnp.int32(entry.block_ids[nfull]),
+                jnp.int32(cow[0]))
+            row_ids += cow
+        row_ids += self.allocator.alloc(tot - len(row_ids))
+        table_row = np.full(self.eng.nb_total, -1, np.int32)
+        table_row[:tot] = row_ids
+        kq = -(-q // self.C)
+        toks = np.full((1, kq * self.C), self.eng.pad_id, np.int32)
+        toks[0, :q] = suffix
+        self._dispatch_paged_refill(toks, slot, budget, table_row,
+                                    entry.row_state, L0, L0 + q, entry.pad)
+
+    def _prefill_prefix(self, prefix: tuple):
+        """Prefill a canonical prefix run (left-padded to a chunk
+        multiple so relative positions are admission-invariant) and
+        snapshot the row state at its end."""
+        from repro.serving.prefix_cache import PrefixEntry
+        bs = self.eng.block_size
+        p = len(prefix)
+        pad0 = (-p) % self.C
+        L0 = p + pad0
+        ids = self.allocator.alloc(-(-L0 // bs))
+        table_row = np.full(self.eng.nb_total, -1, np.int32)
+        table_row[:len(ids)] = ids
+        toks = np.full((1, L0), self.eng.pad_id, np.int32)
+        toks[0, pad0:] = list(prefix)
+        self.cache, snap = self.eng._paged_prefix_prefill(
+            self.eng.params, jnp.asarray(toks), self.cache,
+            jnp.asarray(table_row), jnp.int32(L0), jnp.int32(pad0),
+            self.eng._paged_zero_row_state())
+        return PrefixEntry(block_ids=list(ids), length=L0, pad=pad0,
+                           row_state=snap)
 
     # ------------------------------------------------------------- decoding
 
@@ -651,25 +1134,42 @@ class ContinuousSession:
         assert self.active()
         B = self.B
         live = ~self.done
-        maxrem = int((self._budget[live] - self.idx[live]).max())
-        cap = self.eng._cont_kv_cap(self.length + maxrem + 2)
+        rem = self._budget[live] - self.idx[live]
+        if self.paged:
+            cap = None
+            nbc = self.eng._cont_nb_cap(
+                int((self.lengths[live] + rem).max()) + 2)
+        else:
+            cap = self.eng._cont_kv_cap(self.length + int(rem.max()) + 2)
+            nbc = None
         (self.tok, self._done_d, self._rem_d, self._idx_d, self.out,
          self.cache, summary) = self.eng._decode_cont(
             self.eng.params, self.tok, self.cache, self._seg_key,
             self._done_d, self._rem_d, self._idx_d, self.out,
             jnp.int32(self.tstep), jnp.asarray(drain), gp=self.gen,
-            kv_cap=cap)
+            kv_cap=cap, nb_cap=nbc)
         s = np.asarray(summary)                 # the one per-segment sync
         done_new = s[:B].astype(bool)
         idx_new = s[B:2 * B]
-        self.tstep = int(s[2 * B])
-        self.length = int(s[2 * B + 1])
+        if self.paged:
+            self.lengths = s[2 * B:3 * B].astype(np.int64)
+            self.tstep = int(s[3 * B])
+            self.length = int(self.lengths.max())
+        else:
+            self.tstep = int(s[2 * B])
+            self.length = int(s[2 * B + 1])
         newly = np.nonzero(done_new & ~self.done)[0]
         events = []
         if newly.size:
             out_h = np.asarray(self.out)        # [B, max_new], small
             events = [(int(i), out_h[i, :idx_new[i]].tolist())
                       for i in newly]
+            if self.paged:
+                # a finished row's blocks go straight back to the pool;
+                # the frozen row never reads or writes them again
+                # (decode runs it with active=False)
+                for i in newly:
+                    self._release_slot(int(i))
         self.done = done_new
         self.idx = idx_new.astype(np.int32)
         self.segments += 1

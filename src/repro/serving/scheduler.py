@@ -175,6 +175,8 @@ class ContinuousStats:
     frames: int = 0               # full batch (re)starts
     segments: int = 0             # compiled decode segments dispatched
     refills: int = 0              # mid-frame per-slot swaps
+    prefix_hits: int = 0          # prefix-cache hits (paged sessions)
+    prefix_misses: int = 0        # prefix-cache misses (paged sessions)
     ttft_s: List[float] = field(default_factory=list)
     latency_s: List[float] = field(default_factory=list)
 
@@ -204,25 +206,37 @@ class _ContRequest:
     rid: int
     prompt: List[int]
     budget: int
+    prefix_len: int = 0           # retrieved-context prefix (0 = none)
 
 
 class ContinuousQueue:
-    """Continuous-batching scheduler: FIFO admission with per-slot
-    refill.  Requests carry their own ``max_new_tokens`` budget (capped
-    by the queue's ``GenerationParams``); a pending request that does
-    not yet fit the live frame (prompt frames below the current
-    position, budget above it) is skipped until it does or a fresh
-    frame starts.  Completion identity, per-request latency and TTFT
-    are preserved via request ids."""
+    """Continuous-batching scheduler with pluggable admission policy.
+
+    ``policy="fifo"`` (default) admits the first pending request that
+    fits the live frame (FIFO-with-skip); ``policy="sjf"`` admits the
+    fitting request with the fewest prefill chunks (shortest-prefill-
+    first), which front-loads cheap admissions and lowers mean TTFT —
+    a cached retrieved-context prefix makes a long prompt *cheap*, so
+    SJF and the prefix cache compose.
+
+    Requests carry their own ``max_new_tokens`` budget (capped by the
+    queue's ``GenerationParams``) and an optional ``prefix_len`` marking
+    a shared retrieved-context prefix (paged engines fork its prefilled
+    blocks out of the session's ``PrefixCache``).  Completion identity,
+    per-request latency and TTFT are preserved via request ids."""
 
     def __init__(self, engine: ServeEngine,
-                 gen: Optional[GenerationParams] = None, *, key=None):
+                 gen: Optional[GenerationParams] = None, *, key=None,
+                 policy: str = "fifo", prefix_capacity: int = 8):
         self.engine = engine
         self.gen = gen or GenerationParams()
         if engine.prefill_chunk is None:
             raise ValueError("ContinuousQueue needs an engine built with "
                              "prefill_chunk=...; use RequestQueue for "
                              "synchronous waves")
+        if policy not in ("fifo", "sjf"):
+            raise ValueError(f"unknown admission policy {policy!r}; "
+                             "expected 'fifo' or 'sjf'")
         if self.gen.max_new_tokens < 1 \
                 or self.gen.max_new_tokens >= engine.max_len \
                 or engine.cont_max_prompt_len(self.gen.max_new_tokens) < 1:
@@ -230,6 +244,8 @@ class ContinuousQueue:
                 f"max_new_tokens={self.gen.max_new_tokens} and "
                 f"prefill_chunk={engine.prefill_chunk} do not fit the "
                 f"engine cache (max_len={engine.max_len})")
+        self.policy = policy
+        self.prefix_capacity = prefix_capacity
         self._key = key if key is not None else jax.random.PRNGKey(0)
         self._pending: List[_ContRequest] = []
         self._done: Dict[int, ContinuousCompletion] = {}
@@ -239,7 +255,8 @@ class ContinuousQueue:
     # -------------------------------------------------------------- intake
 
     def submit(self, prompt: Sequence[int],
-               max_new_tokens: Optional[int] = None) -> int:
+               max_new_tokens: Optional[int] = None,
+               prefix_len: Optional[int] = None) -> int:
         rid = self._next_rid
         self._next_rid += 1
         budget = self.gen.max_new_tokens if max_new_tokens is None \
@@ -253,25 +270,72 @@ class ContinuousQueue:
             self._done[rid] = ContinuousCompletion(
                 rid, [], 0, budget, -1, -1, 0.0, 0.0)
             return rid
+        prefix_len = max(0, min(prefix_len or 0, len(prompt) - 1))
         cap = self.engine.cont_max_prompt_len(self.gen.max_new_tokens)
         if len(prompt) > cap:
-            warnings.warn(
-                f"prompt of {len(prompt)} tokens exceeds the continuous "
-                f"frame capacity ({cap} = chunk-aligned max_len="
-                f"{self.engine.max_len} - max_new_tokens="
-                f"{self.gen.max_new_tokens}); truncated-left to {cap} "
-                f"tokens", stacklevel=2)
-            prompt = prompt[-cap:]
-        self._pending.append(_ContRequest(rid, prompt, budget))
+            prompt, prefix_len = self._truncate(prompt, prefix_len, cap)
+        if self.engine.paged:
+            self._check_block_span(prompt, prefix_len, budget)
+        self._pending.append(_ContRequest(rid, prompt, budget, prefix_len))
         return rid
 
+    def _truncate(self, prompt: List[int], prefix_len: int,
+                  cap: int) -> tuple:
+        """Truncate-left an over-long prompt without destabilizing the
+        prefix-cache key: the kept prefix length is rounded down to a
+        prefill-chunk multiple, so every request against the same
+        retrieved context (questions of any length within a chunk
+        class) truncates to the *same* prefix tokens and still shares
+        one cache entry.  A plain left-truncate would slide the cut
+        with the question length and split the context mid-document,
+        making each hash unique."""
+        n = len(prompt)
+        q = n - prefix_len
+        keep_p = (cap - min(q, cap)) // self.engine.prefill_chunk \
+            * self.engine.prefill_chunk if prefix_len else 0
+        if keep_p >= 1:
+            kept = keep_p + q
+            warnings.warn(
+                f"prompt of {n} tokens exceeds the continuous frame "
+                f"capacity ({cap}); truncated-left to {kept} tokens at a "
+                f"chunk boundary (prefix {prefix_len} -> {keep_p} so the "
+                f"shared-prefix cache key stays stable)", stacklevel=3)
+            return prompt[prefix_len - keep_p:], keep_p
+        warnings.warn(
+            f"prompt of {n} tokens exceeds the continuous frame "
+            f"capacity ({cap} = chunk-aligned max_len="
+            f"{self.engine.max_len} - max_new_tokens="
+            f"{self.gen.max_new_tokens}); truncated-left to {cap} "
+            f"tokens", stacklevel=3)
+        return prompt[-cap:], 0
+
+    def _check_block_span(self, prompt: List[int], prefix_len: int,
+                          budget: int) -> None:
+        """Reject a request whose block run cannot fit even an *empty*
+        pool (it would never become admissible and stall the queue)."""
+        C, bs = self.engine.prefill_chunk, self.engine.block_size
+        padded = -(-len(prompt) // C) * C
+        need = -(-(padded + budget) // bs)
+        if prefix_len:
+            L0 = prefix_len + (-prefix_len) % C
+            tot = -(-(L0 + len(prompt) - prefix_len + budget) // bs)
+            need = max(need, -(-L0 // bs) + tot - L0 // bs)
+        if need > self.engine.num_blocks:
+            raise ValueError(
+                f"request needs {need} KV blocks (prompt {len(prompt)}, "
+                f"budget {budget}) but the pool only has "
+                f"{self.engine.num_blocks}")
+
     def submit_all(self, prompts: Iterable[Sequence[int]],
-                   max_new_tokens: Optional[Iterable[int]] = None
+                   max_new_tokens: Optional[Iterable[int]] = None,
+                   prefix_lens: Optional[Iterable[int]] = None
                    ) -> List[int]:
         budgets = list(max_new_tokens) if max_new_tokens is not None \
             else None
+        plens = list(prefix_lens) if prefix_lens is not None else None
         prompts = list(prompts)
-        return [self.submit(p, budgets[i] if budgets else None)
+        return [self.submit(p, budgets[i] if budgets else None,
+                            plens[i] if plens else None)
                 for i, p in enumerate(prompts)]
 
     def pending(self) -> int:
@@ -281,11 +345,24 @@ class ContinuousQueue:
 
     def _admissible(self, session: ContinuousSession
                     ) -> Optional[_ContRequest]:
-        """First pending request (FIFO) that fits the live frame."""
+        """Next pending request that fits the live frame: first fit
+        (FIFO-with-skip) or cheapest prefill among the fits (SJF)."""
+        def fits(r):
+            return session.can_refill(len(r.prompt), r.budget,
+                                      r.prefix_len or None, r.prompt)
+        if self.policy == "fifo":
+            for r in self._pending:
+                if fits(r):
+                    return r
+            return None
+        best = None
         for r in self._pending:
-            if session.can_refill(len(r.prompt), r.budget):
-                return r
-        return None
+            if fits(r):
+                cost = session.admission_cost(
+                    len(r.prompt), r.budget, r.prefix_len or None, r.prompt)
+                if best is None or cost < best[0]:
+                    best = (cost, r)
+        return best[1] if best else None
 
     def run(self) -> Dict[int, List[int]]:
         """Drain the queue; returns {rid: generated tokens}.  TTFT and
@@ -293,45 +370,74 @@ class ContinuousQueue:
         included), so they compose across requests like a serving
         trace."""
         t0 = time.perf_counter()
-        session = ContinuousSession(self.engine, self.gen, key=self._key)
+        paged = self.engine.paged
+        session = ContinuousSession(
+            self.engine, self.gen, key=self._key,
+            prefix_cache=self.prefix_capacity if paged else None)
         owner: Dict[int, _ContRequest] = {}
+
+        def admit(slot: int, r: _ContRequest) -> None:
+            owner[slot] = r
+            now = time.perf_counter() - t0
+            self.stats.ttft_s.append(now)
+            self._done[r.rid] = ContinuousCompletion(
+                r.rid, [], len(r.prompt), r.budget, slot,
+                session.frames, now, now)
+
         while self._pending or session.active():
-            if not session.active():
-                batch = self._pending[:session.B]
+            if not session.active() and (not paged or session.cache is None):
+                # non-paged sessions restart a frame whenever the batch
+                # drains; a paged session only ever opens ONE frame (the
+                # pool persists, so admission continues through refill
+                # below — restarting would drop the prefix cache)
+                n = max(1, session.frame_capacity(
+                    [(len(r.prompt), r.budget) for r in self._pending])) \
+                    if paged else session.B
+                if paged and any(r.prefix_len for r in self._pending):
+                    # frame prefill bypasses the prefix cache (rows are
+                    # packed left-padded, not in canonical prefix
+                    # layout); open the frame with one row so the rest
+                    # admit through cache-aware refill and shared
+                    # contexts fork instead of re-prefilling
+                    n = 1
+                batch = self._pending[:n]
                 del self._pending[:len(batch)]
                 session.begin_frame([r.prompt for r in batch],
                                     [r.budget for r in batch])
-                now = time.perf_counter() - t0
                 for slot, r in enumerate(batch):
-                    owner[slot] = r
-                    self.stats.ttft_s.append(now)
-                    self._done[r.rid] = ContinuousCompletion(
-                        r.rid, [], len(r.prompt), r.budget, slot,
-                        session.frames, now, now)
+                    admit(slot, r)
                 continue
-            for slot, tokens in session.run_segment(
-                    drain=not self._pending):
-                r = owner.pop(slot)
-                now = time.perf_counter() - t0
-                c = self._done[r.rid]
-                c.tokens, c.done_s = tokens, now
-                self.stats.tokens_out += len(tokens)
-                self.stats.latency_s.append(now)
+            if session.active():
+                for slot, tokens in session.run_segment(
+                        drain=not self._pending):
+                    r = owner.pop(slot)
+                    now = time.perf_counter() - t0
+                    c = self._done[r.rid]
+                    c.tokens, c.done_s = tokens, now
+                    self.stats.tokens_out += len(tokens)
+                    self.stats.latency_s.append(now)
+            admitted = 0
             for slot in session.free_slots():
                 r = self._admissible(session)
                 if r is None:
                     break
                 self._pending.remove(r)
-                session.refill(slot, r.prompt, r.budget)
-                owner[slot] = r
-                now = time.perf_counter() - t0
-                self.stats.ttft_s.append(now)
-                self._done[r.rid] = ContinuousCompletion(
-                    r.rid, [], len(r.prompt), r.budget, slot,
-                    session.frames, now, now)
+                session.refill(slot, r.prompt, r.budget,
+                               prefix_len=r.prefix_len or None)
+                admitted += 1
+                admit(slot, r)
+            if paged and self._pending and not admitted \
+                    and not session.active():
+                raise RuntimeError(
+                    "paged admission stalled: a pending request cannot "
+                    "be scheduled even into an idle frame")
         self.stats.frames += session.frames
         self.stats.segments += session.segments
         self.stats.refills += session.refills
+        if session.prefix_cache is not None:
+            self.stats.prefix_hits += session.prefix_cache.hits
+            self.stats.prefix_misses += session.prefix_cache.misses
+        session.release()
         return {rid: c.tokens for rid, c in self._done.items()}
 
     def result(self, rid: int) -> ContinuousCompletion:

@@ -1,0 +1,316 @@
+"""Paged KV cache: block allocator, paged continuous parity for every
+cache kind, shared-prefix forking, admission policy and truncation.
+
+The parity bar is the same as test_continuous_batching: token-exact
+agreement with a *solo* ``generate_reference`` run per prompt (batched
+references left-pad recurrent rows differently).  The paged path must
+additionally leave the block pool leak-free after ``release()``.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.kernels import ops, ref
+from repro.models import Model
+from repro.models import cache as cache_lib
+from repro.serving import ContinuousQueue, GenerationParams, ServeEngine
+
+
+def make_paged_engine(arch, key, batch_size=2, max_len=96, prefill_chunk=8,
+                      block_size=16, num_blocks=None):
+    cfg = get_smoke_config(arch)
+    cf = float(cfg.moe.num_experts) if cfg.moe else None
+    params = Model(cfg).init_params(key, max_seq=max_len)
+    return ServeEngine(cfg, params, max_len=max_len, batch_size=batch_size,
+                       moe_capacity_factor=cf, prefill_chunk=prefill_chunk,
+                       paged=True, block_size=block_size,
+                       num_blocks=num_blocks)
+
+
+def solo_refs(eng, prompts, budget):
+    gp = GenerationParams(max_new_tokens=budget)
+    return [eng.generate_reference([p], gen=gp)[0][:budget] for p in prompts]
+
+
+def drain(sess, outs, n, budget):
+    while len(outs) < n:
+        for slot, toks in sess.run_segment(drain=True):
+            outs[slot] = toks[:budget]
+    return outs
+
+
+# ---------------------------------------------------------------- allocator
+
+
+def test_block_allocator_alloc_free_refcount():
+    a = cache_lib.BlockAllocator(4)
+    ids = a.alloc(3)
+    assert sorted(ids) == [0, 1, 2] and a.available == 1
+    shared = a.fork(ids[:2])
+    assert shared == ids[:2]
+    a.free(ids)                       # drops one owner; ids[:2] survive
+    assert a.available == 2
+    a.free(shared)
+    assert a.available == 4
+    assert (a.refcount == 0).all()
+
+
+def test_block_allocator_errors_and_backpressure():
+    a = cache_lib.BlockAllocator(2)
+    ids = a.alloc(2)
+    assert not a.can_alloc(1)
+    with pytest.raises(MemoryError):
+        a.alloc(1)
+    a.free(ids)
+    with pytest.raises(ValueError):
+        a.free([ids[0]])              # double free
+    with pytest.raises(ValueError):
+        a.fork([ids[0]])              # fork of a free block
+    assert a.can_alloc(2)
+    with pytest.raises(ValueError):
+        cache_lib.BlockAllocator(0)
+
+
+def test_block_allocator_recycle_no_leak():
+    a = cache_lib.BlockAllocator(3)
+    for _ in range(5):
+        ids = a.alloc(2)
+        more = a.fork(ids)
+        a.free(ids)
+        a.free(more)
+    assert a.available == 3 and (a.refcount == 0).all()
+
+
+# ------------------------------------------------------------------ parity
+
+
+@pytest.mark.parametrize("arch", [
+    "llama3-8b",                      # full (pooled) attention
+    "gemma2-9b",                      # rolling local + pooled + softcap
+    "xlstm-350m",                     # recurrent only
+    "hymba-1.5b",                     # rolling attn + mamba hybrid
+    "whisper-base",                   # enc-dec, learned positions
+])
+def test_paged_parity_frame_refill_fork(arch, key):
+    """One frame, a plain paged refill, and a prefix-cache fork must all
+    be token-exact against solo references — for every cache kind."""
+    eng = make_paged_engine(arch, key)
+    if arch == "whisper-base":        # learned positions: pow-2 prompts
+        ctx = [5, 6, 7, 2, 3, 4, 1, 2]
+        q1, q2 = [4, 4, 1, 3, 2, 6, 7, 5], [9, 3, 1, 5, 2, 6, 7, 4]
+    else:
+        ctx = [5, 6, 7, 2, 3, 4, 1, 2, 9, 9, 3]
+        q1, q2 = [4, 4, 1], [7, 8, 2]
+    budget = 5
+    refs = solo_refs(eng, [ctx + q1, ctx + q2], budget)
+    sess = eng.continuous_session(GenerationParams(max_new_tokens=budget),
+                                  key=jax.random.PRNGKey(7), prefix_cache=4)
+    sess.begin_frame([ctx + q1, ctx + q2], [budget, budget])
+    outs = drain(sess, {}, 2, budget)
+    assert [outs[s] for s in sorted(outs)] == refs
+
+    # plain refill (no prefix): exact and block-accounted
+    sess.refill(0, ctx + q1, budget)
+    outs = drain(sess, {}, 1, budget)
+    assert outs[0] == refs[0]
+
+    # prefix fork: first admission prefills the prefix (miss), the
+    # second forks its blocks (hit) — both token-exact
+    for slot, q in zip(range(2), (q1, q2)):
+        assert sess.can_refill(len(ctx + q), budget,
+                               prefix_len=len(ctx), prompt=ctx + q)
+        sess.refill(slot, ctx + q, budget, prefix_len=len(ctx))
+    outs = drain(sess, {}, 2, budget)
+    assert [outs[s] for s in sorted(outs)] == refs
+    assert sess.prefix_cache.hits == 1 and sess.prefix_cache.misses == 1
+
+    sess.release()                    # leak check: every block returned
+    assert sess.allocator.available == eng.num_blocks
+    assert (sess.allocator.refcount == 0).all()
+
+
+def test_paged_long_running_no_drain(key):
+    """A paged session admits indefinitely through one frame: total
+    served tokens exceed what any single static frame could hold, with
+    no drain-and-restart (frames == 1)."""
+    eng = make_paged_engine("llama3-8b", key, max_len=64, prefill_chunk=8)
+    budget = 6
+    prompts = [[1 + (7 * i + j) % 9 for j in range(5 + i % 7)]
+               for i in range(12)]
+    refs = solo_refs(eng, prompts, budget)
+    q = ContinuousQueue(eng, GenerationParams(max_new_tokens=budget),
+                        key=jax.random.PRNGKey(3))
+    rids = [q.submit(p) for p in prompts]
+    outs = q.run()
+    assert [outs[r] for r in rids] == refs
+    assert q.stats.frames == 1        # never drained and restarted
+    served = sum(len(p) for p in prompts) + sum(len(outs[r]) for r in rids)
+    assert served > eng.max_len * eng.batch_size
+
+
+def test_prefix_fork_cow_midblock_tail(key):
+    """A prefix whose padded length is not a block multiple forks its
+    full blocks and copies the tail block (COW): the cached entry keeps
+    its own tail, so a second fork still hits and stays exact."""
+    eng = make_paged_engine("llama3-8b", key, prefill_chunk=8,
+                            block_size=16)
+    ctx = [5, 6, 7, 2, 3, 4, 1, 2]    # L0 = 8 -> mid-block tail (8 % 16)
+    qs = [[4, 4, 1], [7, 8, 2], [9, 1, 5]]
+    budget = 4
+    refs = solo_refs(eng, [ctx + q for q in qs], budget)
+    sess = eng.continuous_session(GenerationParams(max_new_tokens=budget),
+                                  key=jax.random.PRNGKey(5), prefix_cache=4)
+    sess.begin_frame([[1, 2, 3]], [1])
+    drain(sess, {}, 1, 1)
+    for i, q in enumerate(qs):
+        sess.refill(0, ctx + q, budget, prefix_len=len(ctx))
+        outs = drain(sess, {}, 1, budget)
+        assert outs[0] == refs[i]
+    pc = sess.prefix_cache
+    assert pc.misses == 1 and pc.hits == 2
+    sess.release()
+    assert sess.allocator.available == eng.num_blocks
+
+
+def test_paged_pool_exhaustion_backpressure(key):
+    """can_refill reports backpressure while the pool is full and
+    recovers once a row finishes and returns its blocks; the scheduler
+    path still completes every request."""
+    eng = make_paged_engine("llama3-8b", key, batch_size=2, max_len=96,
+                            prefill_chunk=8, block_size=16, num_blocks=2)
+    budget = 4
+    sess = eng.continuous_session(GenerationParams(max_new_tokens=budget),
+                                  key=jax.random.PRNGKey(1))
+    long_p = list(range(1, 20))       # ceil((24 + 4) / 16) = 2 blocks
+    sess.begin_frame([long_p], [budget])
+    assert not sess.can_refill(len(long_p), budget)   # pool is full
+    drain(sess, {}, 1, budget)                        # row done -> freed
+    assert sess.can_refill(len(long_p), budget)
+    sess.release()
+
+    q = ContinuousQueue(eng, GenerationParams(max_new_tokens=budget))
+    with pytest.raises(ValueError):                   # can never fit
+        q.submit(list(range(1, 40)), max_new_tokens=budget)
+    rids = [q.submit(long_p) for _ in range(3)]       # fit one at a time
+    outs = q.run()
+    assert all(len(outs[r]) == budget for r in rids)
+
+
+# ------------------------------------------------------- admission policy
+
+
+def test_sjf_admits_shortest_prefill_first(key):
+    """With both candidates admissible, SJF refills the cheap prefill
+    first (better mean TTFT); FIFO keeps submission order."""
+    long_p = [1 + i % 9 for i in range(32)]           # 4 chunks
+    short_p = [2, 7, 1, 8, 2, 8, 1, 8]                # 1 chunk
+    frame_p = [3, 1, 4, 1, 5]
+    ttft = {}
+    for policy in ("fifo", "sjf"):
+        eng = make_paged_engine("llama3-8b", key, batch_size=1)
+        q = ContinuousQueue(eng, GenerationParams(max_new_tokens=4),
+                            key=jax.random.PRNGKey(2), policy=policy)
+        q.submit(frame_p)                             # occupies the frame
+        rid_long = q.submit(long_p)
+        rid_short = q.submit(short_p)
+        q.run()
+        ttft[policy] = (q.result(rid_long).ttft_s,
+                        q.result(rid_short).ttft_s)
+    assert ttft["fifo"][0] < ttft["fifo"][1]          # FIFO: long first
+    assert ttft["sjf"][1] < ttft["sjf"][0]            # SJF: short first
+
+
+def test_sjf_rejects_unknown_policy(key):
+    eng = make_paged_engine("llama3-8b", key)
+    with pytest.raises(ValueError):
+        ContinuousQueue(eng, GenerationParams(max_new_tokens=4),
+                        policy="lifo")
+
+
+# ------------------------------------------------------------- truncation
+
+
+def test_truncation_keeps_prefix_hash_stable(key):
+    """Over-long prompts truncate the retrieved-context prefix at a
+    chunk boundary, so every question against the same context (within
+    a chunk class) still maps to one cache entry — and never splits the
+    kept prefix mid-chunk."""
+    eng = make_paged_engine("llama3-8b", key, batch_size=1, max_len=96,
+                            prefill_chunk=8)
+    gen = GenerationParams(max_new_tokens=16)
+    q = ContinuousQueue(eng, gen, key=jax.random.PRNGKey(4))
+    cap = eng.cont_max_prompt_len(gen.max_new_tokens)
+    ctx = [1 + i % 9 for i in range(90)]              # over-long prefix
+    qs = [[4] * 10, [7] * 14, [2] * 12]               # one chunk class
+    rids = []
+    for suffix in qs:
+        with pytest.warns(UserWarning, match="truncated-left"):
+            rids.append(q.submit(ctx + suffix, prefix_len=len(ctx)))
+    reqs = list(q._pending)
+    assert all(len(r.prompt) <= cap for r in reqs)
+    # identical kept prefix across question lengths -> one cache key
+    p0 = reqs[0].prefix_len
+    assert p0 % eng.prefill_chunk == 0 and p0 >= 1
+    assert all(r.prefix_len == p0 for r in reqs)
+    assert all(r.prompt[:p0] == reqs[0].prompt[:p0] for r in reqs)
+    outs = q.run()
+    assert all(len(outs[r]) == gen.max_new_tokens for r in rids)
+    assert q.stats.prefix_misses == 1 and q.stats.prefix_hits == 1
+    # without a prefix the old plain truncate-left still applies
+    with pytest.warns(UserWarning, match="truncated-left"):
+        rid = q.submit(list(range(1, 120)))
+    assert q._pending[-1].prefix_len == 0
+    assert len(q._pending[-1].prompt) == cap
+
+
+# ----------------------------------------------------------------- kernel
+
+
+@pytest.mark.parametrize("softcap", [None, 30.0])
+def test_paged_attention_kernel_matches_ref(softcap):
+    """Pallas paged decode kernel (interpret mode) vs the jnp oracle:
+    GQA broadcast, -1 (unallocated) table entries, per-row first/last
+    windows."""
+    rng = np.random.default_rng(0)
+    B, H, KV, hd, bs, nb, P = 3, 4, 2, 16, 8, 4, 10
+    q = jnp.asarray(rng.standard_normal((B, H, hd)), jnp.float32)
+    k_pool = jnp.asarray(rng.standard_normal((P, bs, KV, hd)), jnp.float32)
+    v_pool = jnp.asarray(rng.standard_normal((P, bs, KV, hd)), jnp.float32)
+    tables = jnp.asarray([[0, 1, 2, -1],
+                          [3, 4, -1, -1],
+                          [5, 6, 7, 8]], jnp.int32)
+    first = jnp.asarray([2, 0, 5], jnp.int32)
+    last = jnp.asarray([20, 9, 30], jnp.int32)
+    want = ref.paged_attention_ref(q, k_pool, v_pool, tables, first, last,
+                                   softcap=softcap)
+    from repro.kernels.paged_attention import paged_decode_attention_pallas
+    got = paged_decode_attention_pallas(q, k_pool, v_pool, tables, first,
+                                        last, softcap=softcap,
+                                        interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_all_blocks_unallocated_row():
+    """A row whose table is all -1 (freshly admitted, nothing written)
+    must not NaN: the online softmax self-corrects to zeros."""
+    B, H, KV, hd, bs, nb, P = 2, 2, 1, 8, 4, 2, 4
+    q = jnp.ones((B, H, hd), jnp.float32)
+    k_pool = jnp.ones((P, bs, KV, hd), jnp.float32)
+    v_pool = jnp.ones((P, bs, KV, hd), jnp.float32)
+    tables = jnp.asarray([[0, 1], [-1, -1]], jnp.int32)
+    first = jnp.asarray([0, 0], jnp.int32)
+    last = jnp.asarray([5, 0], jnp.int32)
+    out = ops.paged_decode_attention(q, k_pool, v_pool, tables, first, last,
+                                     use_pallas=False)
+    assert np.isfinite(np.asarray(out)).all()
+    from repro.kernels.paged_attention import paged_decode_attention_pallas
+    out_k = paged_decode_attention_pallas(q, k_pool, v_pool, tables, first,
+                                          last, interpret=True)
+    assert np.isfinite(np.asarray(out_k)).all()
+    np.testing.assert_allclose(np.asarray(out_k[0]), np.asarray(out[0]),
+                               rtol=2e-5, atol=2e-5)
