@@ -23,6 +23,7 @@ import argparse
 import jax
 
 from benchmarks.common import Bench
+from repro import obs
 from repro.cluster import ClusterRuntime, LiveWorkload, replay_trace
 from repro.launch.cluster_serve import NODE_ARCHS, build_cluster
 
@@ -49,6 +50,25 @@ def run_mode(args, *, use_inter_node: bool = True,
     return s
 
 
+def _report_trace(path: str, rec) -> None:
+    """Print the dump's completeness + per-stage latency breakdown
+    (reuses the tools/trace_report.py loaders; degrades to a plain
+    export note if tools/ isn't importable from this cwd)."""
+    try:
+        from tools import trace_report
+    except ImportError:
+        print(f"trace: {rec.span_count()} spans -> {path}", flush=True)
+        return
+    _, events, _ = trace_report.load(path)
+    comp, rooted, frac = trace_report.completeness(events)
+    print(f"trace: {rec.span_count()} spans -> {path}; "
+          f"{comp}/{rooted} request traces complete ({frac:.0%})",
+          flush=True)
+    for name, n, mean, p50, _, p99 in trace_report.stage_breakdown(events):
+        print(f"  {name:<16} n={n:<5} mean={mean:8.2f}ms "
+              f"p50={p50:8.2f}ms p99={p99:8.2f}ms", flush=True)
+
+
 def main(argv=None):
     # argv=[] lets benchmarks.run invoke this section with defaults
     # without argparse seeing run.py's own flags
@@ -69,6 +89,11 @@ def main(argv=None):
                     help="also run the cross-node federated-retrieval "
                          "mode (scheduled routing + sketch-routed "
                          "remote shards)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record request spans during the scheduled "
+                         "mode, export a flight-recorder JSONL dump "
+                         "here, and print its per-stage latency "
+                         "breakdown (tools.trace_report)")
     args = ap.parse_args(argv)
 
     bench = Bench("cluster_e2e", config={
@@ -88,7 +113,16 @@ def main(argv=None):
                                         federated=True)))
     gap = {}
     for mode, kw in modes:
+        rec = obs.enable() if args.trace_out and mode == "scheduled" \
+            else None
         s = run_mode(args, **kw)
+        if rec is not None:
+            rec.record_metrics(obs.registry().snapshot(),
+                               obs.get_tracer().now())
+            obs.disable()
+            rec.export_jsonl(args.trace_out)
+            bench.set_trace(args.trace_out, rec.span_count(), len(rec))
+            _report_trace(args.trace_out, rec)
         gap[mode] = s
         bench.add(mode, round(s["quality_mean"], 4),
                   round(s["drop_rate"], 4), round(s["latency_p50_s"], 3),

@@ -44,7 +44,17 @@ class Bench:
         self.name = name
         self.config = dict(config or {})
         self.rows: List[tuple] = []
+        self.trace: Optional[Dict] = None
         self.t0 = time.time()
+
+    def set_trace(self, path: str, spans: int,
+                  events: Optional[int] = None):
+        """Attach a flight-recorder dump fingerprint to the JSON (the
+        run's span tree is evidence for its rows; see docs/BENCHMARKS.md
+        "trace field")."""
+        self.trace = {"path": path, "spans": int(spans)}
+        if events is not None:
+            self.trace["events"] = int(events)
 
     def add(self, *row):
         self.rows.append(row)
@@ -68,15 +78,18 @@ class Bench:
                     f"{v:.4f}" if isinstance(v, float) else str(v)
                     for v in row) + " |\n")
         jpath = os.path.join(OUTDIR, f"BENCH_{self.name}.json")
+        payload = {
+            "name": self.name,
+            "elapsed_s": round(time.time() - self.t0, 3),
+            "config": self.config,
+            "fingerprint": self.fingerprint(),
+            "header": list(header),
+            "rows": [list(r) for r in self.rows],
+        }
+        if self.trace is not None:
+            payload["trace"] = self.trace
         with open(jpath, "w") as f:
-            json.dump({
-                "name": self.name,
-                "elapsed_s": round(time.time() - self.t0, 3),
-                "config": self.config,
-                "fingerprint": self.fingerprint(),
-                "header": list(header),
-                "rows": [list(r) for r in self.rows],
-            }, f, indent=1, default=float)
+            json.dump(payload, f, indent=1, default=float)
         print(f"[{self.name}] wrote {path} and {jpath} "
               f"({time.time() - self.t0:.0f}s)", flush=True)
 

@@ -42,6 +42,8 @@ from repro.core.inter_node import CapacityFunction
 from repro.data.corpus import Document
 from repro.data.tokenizer import EOS, Tokenizer
 from repro.metrics.text import composite_quality
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.rag.pipeline import build_prompt, split_prompt
 from repro.retrieval.cache import SemanticQueryCache
 from repro.retrieval.encoder import TextEncoder
@@ -64,6 +66,7 @@ class LiveNodeStats:
     cache_hits: int = 0               # retrievals served by the cache
     prefix_hits: int = 0              # paged shared-prefix cache hits
     prefix_misses: int = 0            # ... and misses (prefix prefills)
+    prefix_evictions: int = 0         # ... and LRU evictions for space
     remote_contexts: int = 0          # contexts fetched from other shards
     remote_gold: int = 0              # ... that contained the gold answer
 
@@ -127,13 +130,19 @@ class LiveEdgeNode:
         node's OWN index (queries arrive with coordinator-computed
         embeddings; doc and query embeddings share one seeded encoder).
         """
+        tr = obs_trace.get_tracer()
         n = len(queries)
+        tids = [obs_trace.query_trace(q.qid) for q in queries] \
+            if tr.enabled else [None] * n
         contexts: List[Optional[List[str]]] = [None] * n
         sources: List[Optional[List[int]]] = [None] * n
         misses = []
         for t, q in enumerate(queries):
             if self.cache is not None:
                 hit = self.cache.lookup(q.embedding)
+                if tr.enabled:
+                    tr.event("semantic_cache", tids[t],
+                             hit=hit is not None)
                 if hit is not None:
                     contexts[t], sources[t] = hit
                     self.stats.cache_hits += 1
@@ -142,8 +151,9 @@ class LiveEdgeNode:
         if misses:
             embs = np.stack([queries[t].embedding for t in misses])
             if self.federation is not None:
-                ctxs, srcs = self.federation.retrieve(self.node_id, embs,
-                                                      self.top_k)
+                ctxs, srcs = self.federation.retrieve(
+                    self.node_id, embs, self.top_k,
+                    traces=[tids[t] for t in misses])
             elif len(self.index):
                 _, idx = self.index.search(embs, self.top_k)
                 ctxs = [[str(p) for p in self.index.payloads(row)]
@@ -176,9 +186,15 @@ class LiveEdgeNode:
         is the RequestQueue's bucket packing)."""
         if not queries:
             return []
+        tr = obs_trace.get_tracer()
+        tids = [obs_trace.query_trace(q.qid) for q in queries] \
+            if tr.enabled else [None] * len(queries)
         self.stats.slots += 1
         t0 = time.perf_counter()
-        contexts, sources = self._retrieve(queries)
+        with tr.span("retrieve", traces=tids, node=self.node_id,
+                     queries=len(queries),
+                     federated=self.federation is not None):
+            contexts, sources = self._retrieve(queries)
         t_retrieval = time.perf_counter() - t0
         self.stats.retrieval_s += t_retrieval
 
@@ -191,9 +207,9 @@ class LiveEdgeNode:
                                     policy=self.admission)
             cap = self.engine.cont_max_prompt_len(self.gen.max_new_tokens)
             rids = []
-            for q, c in zip(queries, contexts):
+            for q, c, tid in zip(queries, contexts, tids):
                 toks, plen = split_prompt(q.question, c, self.tok, cap=cap)
-                rids.append(queue.submit(toks, prefix_len=plen))
+                rids.append(queue.submit(toks, prefix_len=plen, trace=tid))
             t0 = time.perf_counter()
             queue.run()
             self.stats.generate_s += time.perf_counter() - t0
@@ -201,6 +217,7 @@ class LiveEdgeNode:
             self.stats.refills += queue.stats.refills
             self.stats.prefix_hits += queue.stats.prefix_hits
             self.stats.prefix_misses += queue.stats.prefix_misses
+            self.stats.prefix_evictions += queue.stats.prefix_evictions
             for rid in rids:
                 done_s[rid] = queue.result(rid).done_s
         else:
@@ -222,10 +239,13 @@ class LiveEdgeNode:
         results: List[QueryResult] = []
         self.last_contexts = {}
         self.last_sources = {}
-        for q, rid, ctx, src in zip(queries, rids, contexts, sources):
+        for q, rid, ctx, src, tid in zip(queries, rids, contexts, sources,
+                                         tids):
             comp = queue.result(rid)
             latency = t_retrieval + done_s[rid]
-            answer = self.tok.decode(comp.tokens)
+            with tr.span("detokenize", trace=tid,
+                         tokens=len(comp.tokens)):
+                answer = self.tok.decode(comp.tokens)
             dropped = latency > slo_s
             quality = 0.0 if dropped else composite_quality(answer,
                                                             q.reference)
@@ -236,7 +256,28 @@ class LiveEdgeNode:
             results.append(QueryResult(q.qid, self.node_id, self.arch,
                                        quality, dropped,
                                        latency_s=latency, answer=answer))
+        if tr.enabled:
+            self._push_metrics(queue, t_retrieval, results)
         return results
+
+    def _push_metrics(self, queue, t_retrieval: float,
+                      results: List[QueryResult]) -> None:
+        """Per-slot rollup into the global metrics registry (host-side,
+        after the slot's generate path has fully drained)."""
+        reg = obs_metrics.registry()
+        node = str(self.node_id)
+        reg.counter("node_queries", node=node).inc(len(results))
+        reg.counter("node_drops", node=node).inc(
+            sum(r.dropped for r in results))
+        reg.counter("node_tokens_out", node=node).inc(
+            queue.stats.tokens_out)
+        reg.histogram("node_retrieval_s", node=node).observe(t_retrieval)
+        h = reg.histogram("node_latency_s", node=node)
+        for r in results:
+            h.observe(r.latency_s)
+        if self.cache is not None:
+            reg.gauge("semantic_cache_hit_rate", node=node).set(
+                self.cache.hit_rate)
 
     # ------------------------------------------------------------ profiling
 

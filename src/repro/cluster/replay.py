@@ -81,8 +81,11 @@ class ReplayReport:
 def replay_trace(runtime: ClusterRuntime, workload: LiveWorkload, *,
                  n_slots: int, slo_s: float, base_volume: int = 8,
                  trace: str = "diurnal", alpha: float = 1.5,
-                 seed: int = 0, verbose: bool = False) -> ReplayReport:
-    """Run ``n_slots`` slots of trace-driven load through the runtime."""
+                 seed: int = 0, verbose: bool = False,
+                 on_slot=None) -> ReplayReport:
+    """Run ``n_slots`` slots of trace-driven load through the runtime.
+    ``on_slot(t, metrics)`` is called after each slot (live telemetry
+    rollups in ``launch.cluster_serve``)."""
     n_domains = len(workload.domains)
     if trace == "diurnal":
         volumes = diurnal_volume_trace(n_slots, base=base_volume, seed=seed)
@@ -97,6 +100,8 @@ def replay_trace(runtime: ClusterRuntime, workload: LiveWorkload, *,
         queries = workload.slot_queries(vol, mix)
         m = runtime.run_slot(queries, slo_s)
         report.slots.append(m)
+        if on_slot is not None:
+            on_slot(t, m)
         if verbose:
             load = "/".join(f"{p:.2f}" for p in m.per_node_load)
             print(f"slot {t:3d}: n={m.n_queries:3d} "

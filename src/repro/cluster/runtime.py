@@ -44,12 +44,9 @@ class ClusterRuntime(Coordinator):
         if not queries:
             return ClusterSlotMetrics(0.0, 0.0, np.zeros(len(self.nodes)),
                                       0)
-        embs = np.stack([q.embedding for q in queries])
-        probs = self.identifier.identify(embs)
-        assign, props = self._route(probs, slo_s)
-        results = self._dispatch(queries, assign, slo_s)
-        # measured-quality feedback closes the PPO loop (dropped -> 0)
-        self._feedback(embs, assign, queries, results)
+        # measured-quality feedback closes the PPO loop (dropped -> 0);
+        # the shared pipeline also carries the per-query request spans
+        props, results, _ = self._slot_pipeline(queries, slo_s)
         lat = np.array([r.latency_s for r in results])
         served = [r.quality for r in results if not r.dropped]
         m = ClusterSlotMetrics(

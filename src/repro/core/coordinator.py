@@ -15,6 +15,8 @@ from repro.core.cluster import EdgeNode, Query, QueryResult
 from repro.core.identifier import OnlineQueryIdentifier
 from repro.core.inter_node import inter_node_schedule
 from repro.core.protocols import QueryRouter, SchedulableNode
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 @dataclass
@@ -86,15 +88,49 @@ class Coordinator:
         self.identifier.maybe_update()
         return scores
 
+    def _slot_pipeline(self, queries: Sequence[Query], slo_s: float):
+        """The shared (simulated + live) slot body, instrumented: one
+        ``request`` root span per query wraps encode -> identify ->
+        route -> dispatch -> feedback, so every downstream stage
+        (retrieve, prefill, decode, ...) nests under each query's
+        trace.  -> (props, results, scores)."""
+        tr = obs_trace.get_tracer()
+        traces = [obs_trace.query_trace(q.qid) for q in queries] \
+            if tr.enabled else None
+        embs = np.stack([q.embedding for q in queries])
+        with tr.span("request", traces=traces, queries=len(queries),
+                     slo_s=slo_s):
+            with tr.span("identify", traces=traces):
+                probs = self.identifier.identify(embs)
+            with tr.span("route", traces=traces, nodes=len(self.nodes)):
+                assign, props = self._route(probs, slo_s)
+            results = self._dispatch(queries, assign, slo_s)
+            scores = self._feedback(embs, assign, queries, results)
+        if tr.enabled:
+            self._push_metrics(props, scores, slo_s)
+        return props, results, scores
+
+    def _push_metrics(self, props: np.ndarray, scores: np.ndarray,
+                      slo_s: float) -> None:
+        """Slot-level rollup: PPO reward trajectory + per-node assigned
+        load vs. profiled capacity (host-side, post-dispatch)."""
+        reg = obs_metrics.registry()
+        h = reg.histogram("ppo_reward")
+        for s in scores:
+            h.observe(float(s))
+        reg.gauge("ppo_updates").set(
+            getattr(self.identifier, "updates_done", 0))
+        caps = self._capacities(slo_s)
+        for n, node in enumerate(self.nodes):
+            nid = str(getattr(node, "node_id", n))
+            reg.gauge("node_assigned_share", node=nid).set(float(props[n]))
+            reg.gauge("node_capacity_queries", node=nid).set(float(caps[n]))
+
     def run_slot(self, queries: Sequence[Query], slo_s: float
                  ) -> SlotMetrics:
         if not queries:
             return SlotMetrics(0.0, 0.0, np.zeros(len(self.nodes)), 0)
-        embs = np.stack([q.embedding for q in queries])
-        probs = self.identifier.identify(embs)
-        assign, props = self._route(probs, slo_s)
-        results = self._dispatch(queries, assign, slo_s)
-        self._feedback(embs, assign, queries, results)
+        props, results, _ = self._slot_pipeline(queries, slo_s)
         qual = float(np.mean([r.quality for r in results if not r.dropped])
                      ) if any(not r.dropped for r in results) else 0.0
         drop = float(np.mean([r.dropped for r in results]))

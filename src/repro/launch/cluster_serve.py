@@ -23,6 +23,7 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.cluster import ClusterRuntime, LiveEdgeNode, LiveWorkload, \
     enable_federation, replay_trace
 from repro.configs import get_smoke_config
@@ -172,7 +173,16 @@ def main():
                     choices=["fifo", "sjf"],
                     help="continuous-queue admission policy: FIFO-with-"
                          "skip or shortest-prefill-first")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record request spans + telemetry and export a "
+                         "flight-recorder JSONL dump here at exit "
+                         "(read it with tools/trace_report.py)")
+    ap.add_argument("--metrics-every", type=int, default=0, metavar="N",
+                    help="with --trace-out: print a metrics rollup "
+                         "every N slots (0 = only record, never print)")
     args = ap.parse_args()
+
+    rec = obs.enable() if args.trace_out else None
 
     t0 = time.time()
     entities = args.entities or (8 if args.smoke else 24)
@@ -213,10 +223,28 @@ def main():
           f"(base {args.per_slot}/slot, SLO {args.slo:g}s) under {mode}",
           flush=True)
     workload = LiveWorkload(qas, encoder, seed=args.seed + 2)
+
+    on_slot = None
+    if rec is not None:
+        reg = obs.registry()
+        last_snap = [reg.snapshot()]
+
+        def on_slot(t, m):
+            d = reg.delta(last_snap[0])
+            last_snap[0] = reg.snapshot()
+            rec.record_metrics(last_snap[0], obs.get_tracer().now())
+            if args.metrics_every and (t + 1) % args.metrics_every == 0:
+                scalars = {k: v for k, v in d.items()
+                           if not isinstance(v, dict)}
+                line = " ".join(
+                    f"{k}={v:.3g}" if isinstance(v, float) else f"{k}={v}"
+                    for k, v in sorted(scalars.items()))
+                print(f"  metrics[slot {t}]: {line}", flush=True)
+
     report = replay_trace(runtime, workload, n_slots=args.slots,
                           slo_s=args.slo, base_volume=args.per_slot,
                           trace=args.trace, seed=args.seed + 3,
-                          verbose=True)
+                          verbose=True, on_slot=on_slot)
 
     s = report.summary()
     print(f"\nsummary: {s['queries']} queries in {s['slots']} slots | "
@@ -244,6 +272,14 @@ def main():
         print(f"federation: {fs.shard_probes} shard probes "
               f"({fs.remote_probes} remote) for {fs.queries} queries, "
               f"{fs.remote_contexts} remote contexts merged")
+    if rec is not None:
+        rec.record_metrics(obs.registry().snapshot(),
+                           obs.get_tracer().now())
+        obs.disable()
+        rec.export_jsonl(args.trace_out)
+        print(f"trace: {rec.span_count()} spans "
+              f"({len(rec)} events, {rec.dropped} dropped) "
+              f"-> {args.trace_out}")
     print(f"total {time.time() - t0:.0f}s")
 
 

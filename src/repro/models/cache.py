@@ -231,7 +231,13 @@ class BlockAllocator:
     Pure numpy/python bookkeeping — block *contents* live in the jit'd
     cache pools; this object only decides which pool rows are live.
     ``fork`` increments refcounts for prefix sharing; a block returns to
-    the free list when its refcount reaches zero."""
+    the free list when its refcount reaches zero.
+
+    Telemetry (read by the obs metrics layer, docs/OBSERVABILITY.md):
+    ``utilization()`` / ``high_watermark`` report live-block pressure,
+    ``forks`` counts COW shares, and ``exhaustions`` counts admission
+    probes the pool could not satisfy (``can_alloc`` -> False) —
+    the signal that a queue is waiting on pool space."""
 
     def __init__(self, num_blocks: int):
         if num_blocks < 1:
@@ -240,13 +246,28 @@ class BlockAllocator:
         self.refcount = np.zeros((self.num_blocks,), np.int32)
         # stack: pop() hands out low ids first
         self._free = list(range(self.num_blocks - 1, -1, -1))
+        self.high_watermark = 0       # peak blocks ever live at once
+        self.forks = 0                # COW shares handed out
+        self.exhaustions = 0          # failed can_alloc probes
 
     @property
     def available(self) -> int:
         return len(self._free)
 
+    @property
+    def in_use(self) -> int:
+        """Blocks currently held by at least one owner."""
+        return self.num_blocks - len(self._free)
+
+    def utilization(self) -> float:
+        """Live blocks / pool size, in [0, 1]."""
+        return self.in_use / self.num_blocks
+
     def can_alloc(self, n: int) -> bool:
-        return n <= len(self._free)
+        if n > len(self._free):
+            self.exhaustions += 1
+            return False
+        return True
 
     def alloc(self, n: int) -> List[int]:
         if n > len(self._free):
@@ -256,6 +277,8 @@ class BlockAllocator:
         ids = [self._free.pop() for _ in range(n)]
         for i in ids:
             self.refcount[i] = 1
+        if self.in_use > self.high_watermark:
+            self.high_watermark = self.in_use
         return ids
 
     def free(self, ids: Sequence[int]) -> None:
@@ -276,6 +299,7 @@ class BlockAllocator:
                 raise ValueError(f"fork of free block {i}")
             self.refcount[i] += 1
             out.append(i)
+        self.forks += len(out)
         return out
 
 

@@ -1,0 +1,45 @@
+"""Observability: request tracing, metrics registry, flight recorder.
+
+Zero-dependency (numpy only) and off-hot-path by construction: every
+instrument lives on the host side, never inside jitted code, and the
+whole layer is a no-op until `enable()` attaches a recorder.
+
+    rec = obs.enable()                # tracing on, events -> ring buffer
+    ... serve traffic ...
+    obs.disable()
+    rec.export_jsonl("trace.jsonl")   # -> tools/trace_report.py
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               percentile, registry)
+from repro.obs.recorder import (FlightRecorder, start_device_profile,
+                                stop_device_profile)
+from repro.obs.trace import NULL_SPAN, Tracer, get_tracer, query_trace
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "percentile",
+    "registry", "FlightRecorder", "start_device_profile",
+    "stop_device_profile", "NULL_SPAN", "Tracer", "get_tracer",
+    "query_trace", "enable", "disable", "enabled",
+]
+
+
+def enable(recorder=None, capacity=131072):
+    """Turn tracing on. Returns the recorder events will land in."""
+    rec = recorder if recorder is not None else FlightRecorder(capacity)
+    tr = get_tracer()
+    tr.recorder = rec
+    tr.enabled = True
+    return rec
+
+
+def disable():
+    """Turn tracing off (the fast path goes back to zero clock reads)."""
+    tr = get_tracer()
+    tr.enabled = False
+    rec, tr.recorder = tr.recorder, None
+    tr.reset()
+    return rec
+
+
+def enabled():
+    return get_tracer().enabled

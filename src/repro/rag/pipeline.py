@@ -17,6 +17,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.data.tokenizer import EOS, SEP, Tokenizer
+from repro.obs import trace as obs_trace
 from repro.retrieval.cache import SemanticQueryCache
 from repro.retrieval.encoder import TextEncoder
 from repro.retrieval.index import VectorIndex
@@ -76,52 +77,73 @@ class RAGPipeline:
         self.admission = admission
         self.last_stats = None      # scheduler stats from the last answer()
 
-    def retrieve(self, questions: Sequence[str]
+    def retrieve(self, questions: Sequence[str], traces=None
                  ) -> Tuple[List[List[str]], np.ndarray]:
         """Returns (contexts per question, index scores [Nq, top_k]);
         near-duplicate questions are served from the semantic cache
-        without touching the index."""
-        q_emb = self.encoder.encode(list(questions))
-        contexts: List[Optional[List[str]]] = [None] * len(questions)
-        scores = np.full((len(questions), self.top_k), -1e30, np.float32)
-        misses = []
-        for t, emb in enumerate(q_emb):
-            hit = self.cache.lookup(emb) if self.cache is not None else None
-            if hit is not None:
-                contexts[t], scores[t, :len(hit[1])] = hit[0], hit[1]
-            else:
-                misses.append(t)
-        if misses:
-            s, idx = self.index.search(q_emb[misses], self.top_k)
-            for row, t in enumerate(misses):
-                contexts[t] = [str(p) for p in
-                               self.index.payloads(idx[row])]
-                scores[t, :s.shape[1]] = s[row]
-                if self.cache is not None:
-                    self.cache.insert(q_emb[t], (contexts[t], s[row]))
-        return contexts, scores
+        without touching the index.  ``traces`` (optional, [Nq])
+        attaches the probe to each question's trace."""
+        tr = obs_trace.get_tracer()
+        with tr.span("retrieve", traces=traces, queries=len(questions)):
+            q_emb = self.encoder.encode(list(questions))
+            contexts: List[Optional[List[str]]] = [None] * len(questions)
+            scores = np.full((len(questions), self.top_k), -1e30,
+                             np.float32)
+            misses = []
+            for t, emb in enumerate(q_emb):
+                hit = self.cache.lookup(emb) if self.cache is not None \
+                    else None
+                if tr.enabled and self.cache is not None and traces:
+                    tr.event("semantic_cache", traces[t],
+                             hit=hit is not None)
+                if hit is not None:
+                    contexts[t], scores[t, :len(hit[1])] = hit[0], hit[1]
+                else:
+                    misses.append(t)
+            if misses:
+                s, idx = self.index.search(q_emb[misses], self.top_k)
+                for row, t in enumerate(misses):
+                    contexts[t] = [str(p) for p in
+                                   self.index.payloads(idx[row])]
+                    scores[t, :s.shape[1]] = s[row]
+                    if self.cache is not None:
+                        self.cache.insert(q_emb[t], (contexts[t], s[row]))
+            return contexts, scores
 
     def answer(self, questions: Sequence[str]) -> List[RAGResult]:
-        contexts, scores = self.retrieve(questions)
-        gp = GenerationParams(max_new_tokens=self.max_new_tokens,
-                              eos_id=EOS)
-        if self.engine.prefill_chunk is not None:
-            # continuous batching: submit (tokens, prefix_len) so paged
-            # engines fork repeated retrieved-context prefixes out of
-            # the session PrefixCache instead of re-prefilling them
-            queue = ContinuousQueue(self.engine, gp, policy=self.admission)
-            cap = self.engine.cont_max_prompt_len(gp.max_new_tokens)
-            rids = []
-            for q, c in zip(questions, contexts):
-                toks, plen = split_prompt(q, c, self.tok, cap=cap)
-                rids.append(queue.submit(toks, prefix_len=plen))
-        else:
-            queue = RequestQueue(self.engine, gp)
-            rids = queue.submit_all(
-                self.tok.encode(build_prompt(q, c), bos=True)
-                for q, c in zip(questions, contexts))
-        outs = queue.run()
-        self.last_stats = queue.stats
-        return [RAGResult(q, self.tok.decode(outs[rid]),
-                          contexts[i], scores[i])
-                for i, (q, rid) in enumerate(zip(questions, rids))]
+        tr = obs_trace.get_tracer()
+        traces = [tr.new_trace("rag") for _ in questions] \
+            if tr.enabled else None
+        with tr.span("request", traces=traces, queries=len(questions)):
+            contexts, scores = self.retrieve(questions, traces=traces)
+            gp = GenerationParams(max_new_tokens=self.max_new_tokens,
+                                  eos_id=EOS)
+            if self.engine.prefill_chunk is not None:
+                # continuous batching: submit (tokens, prefix_len) so
+                # paged engines fork repeated retrieved-context prefixes
+                # out of the session PrefixCache instead of re-prefilling
+                queue = ContinuousQueue(self.engine, gp,
+                                        policy=self.admission)
+                cap = self.engine.cont_max_prompt_len(gp.max_new_tokens)
+                rids = []
+                for i, (q, c) in enumerate(zip(questions, contexts)):
+                    toks, plen = split_prompt(q, c, self.tok, cap=cap)
+                    rids.append(queue.submit(
+                        toks, prefix_len=plen,
+                        trace=traces[i] if traces else None))
+            else:
+                queue = RequestQueue(self.engine, gp)
+                rids = queue.submit_all(
+                    self.tok.encode(build_prompt(q, c), bos=True)
+                    for q, c in zip(questions, contexts))
+            outs = queue.run()
+            self.last_stats = queue.stats
+            results = []
+            for i, (q, rid) in enumerate(zip(questions, rids)):
+                with tr.span("detokenize",
+                             trace=traces[i] if traces else None,
+                             tokens=len(outs[rid])):
+                    answer = self.tok.decode(outs[rid])
+                results.append(RAGResult(q, answer, contexts[i],
+                                         scores[i]))
+        return results

@@ -32,6 +32,7 @@ class SemanticQueryCache:
         self._tick = 0
         self.hits = 0
         self.misses = 0
+        self.evictions = 0            # capacity-miss LRU replacements
 
     def __len__(self) -> int:
         return len(self._values)
@@ -80,6 +81,7 @@ class SemanticQueryCache:
             return
         if len(self._values) >= self.capacity:
             j = int(np.argmin(self._used))            # evict LRU
+            self.evictions += 1
             self._embs[j] = emb
             self._values[j] = value
             self._used[j] = self._tick
@@ -94,3 +96,4 @@ class SemanticQueryCache:
         self._tick = 0
         self.hits = 0
         self.misses = 0
+        self.evictions = 0

@@ -43,7 +43,7 @@ docs/ARCHITECTURE.md ("Continuous batching").
 from __future__ import annotations
 
 import warnings
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,6 +52,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import cache as cache_lib
 from repro.models.model import Model
+from repro.obs import trace as obs_trace
 from repro.serving.sampling import GenerationParams, sample_token
 
 _RECURRENT_KINDS = ("mlstm", "slstm", "hymba")
@@ -64,7 +65,8 @@ class ServeEngine:
                  moe_capacity_factor: Optional[float] = None,
                  prefill_chunk: Optional[int] = None,
                  paged: bool = False, block_size: int = 16,
-                 num_blocks: Optional[int] = None):
+                 num_blocks: Optional[int] = None,
+                 profile: Optional[str] = None):
         cf = moe_capacity_factor
         if cf is None and cfg.moe is not None:
             cf = float(cfg.moe.num_experts)   # dropless at serving sizes
@@ -74,6 +76,10 @@ class ServeEngine:
         self.max_len = max_len
         self.batch_size = batch_size
         self.pad_id = pad_id
+        # jax.profiler hook: with profile=<logdir> set, the schedulers
+        # bracket their runs with start_profile()/stop_profile() so
+        # device traces align with host spans (docs/OBSERVABILITY.md)
+        self.profile_dir = profile
         # paged KV: full-attention K/V lives in a shared pool of
         # ``num_blocks`` blocks of ``block_size`` tokens addressed
         # through per-row block tables (see models/cache.py); rows then
@@ -659,6 +665,21 @@ class ServeEngine:
 
     # ----------------------------------------------------------------- public
 
+    def start_profile(self) -> bool:
+        """Begin a ``jax.profiler`` device trace into ``profile_dir``
+        (no-op unless the engine was built with ``profile=...`` and no
+        trace is already live)."""
+        if not self.profile_dir:
+            return False
+        from repro.obs import recorder as obs_recorder
+        return obs_recorder.start_device_profile(self.profile_dir)
+
+    def stop_profile(self) -> bool:
+        if not self.profile_dir:
+            return False
+        from repro.obs import recorder as obs_recorder
+        return obs_recorder.stop_device_profile()
+
     def generate(self, prompts: List[List[int]], max_new_tokens: int = 32,
                  temperature: float = 0.0, key=None,
                  eos_id: Optional[int] = None,
@@ -782,6 +803,9 @@ class ContinuousSession:
         self.frames = 0
         self.segments = 0
         self.refills = 0
+        # slot -> request trace id (set by the scheduler at admission);
+        # decode-segment spans and prefix-cache events attribute to it
+        self.traces: Dict[int, Optional[str]] = {}
         # paged mode: host-side block bookkeeping.  ``lengths`` mirrors
         # the per-row cache["length"]; ``_tables`` mirrors the rows'
         # block tables so freed rows can return their blocks.
@@ -924,12 +948,25 @@ class ContinuousSession:
     def release(self) -> None:
         """Free every pool block held by rows and prefix entries; after
         this ``allocator.available == num_blocks`` (the leak check)."""
+        self.traces.clear()
         if not self.paged:
             return
         for i in range(self.B):
             self._release_slot(i)
         if self.prefix_cache is not None:
             self.prefix_cache.clear()
+
+    def pool_fragmentation(self) -> float:
+        """Internal fragmentation of the live rows: the fraction of
+        allocated pool capacity (blocks x block_size tokens) not yet
+        holding live tokens.  0.0 for non-paged sessions."""
+        if not self.paged:
+            return 0.0
+        nblk = int((self._tables >= 0).sum())
+        if nblk == 0:
+            return 0.0
+        used = int(self.lengths[~self.done].sum())
+        return max(0.0, 1.0 - used / (nblk * self.eng.block_size))
 
     # ------------------------------------------------------------ admission
 
@@ -1076,6 +1113,10 @@ class ContinuousSession:
                      prefix: tuple) -> None:
         bs = self.eng.block_size
         entry = self.prefix_cache.get(prefix)
+        tr = obs_trace.get_tracer()
+        if tr.enabled:
+            tr.event("prefix_cache", self.traces.get(slot),
+                     hit=entry is not None, prefix_len=len(prefix))
         if entry is None:
             entry = self._prefill_prefix(prefix)
             self.prefix_cache.put(prefix, entry)
@@ -1135,42 +1176,57 @@ class ContinuousSession:
         B = self.B
         live = ~self.done
         rem = self._budget[live] - self.idx[live]
-        if self.paged:
-            cap = None
-            nbc = self.eng._cont_nb_cap(
-                int((self.lengths[live] + rem).max()) + 2)
-        else:
-            cap = self.eng._cont_kv_cap(self.length + int(rem.max()) + 2)
-            nbc = None
-        (self.tok, self._done_d, self._rem_d, self._idx_d, self.out,
-         self.cache, summary) = self.eng._decode_cont(
-            self.eng.params, self.tok, self.cache, self._seg_key,
-            self._done_d, self._rem_d, self._idx_d, self.out,
-            jnp.int32(self.tstep), jnp.asarray(drain), gp=self.gen,
-            kv_cap=cap, nb_cap=nbc)
-        s = np.asarray(summary)                 # the one per-segment sync
-        done_new = s[:B].astype(bool)
-        idx_new = s[B:2 * B]
-        if self.paged:
-            self.lengths = s[2 * B:3 * B].astype(np.int64)
-            self.tstep = int(s[3 * B])
-            self.length = int(self.lengths.max())
-        else:
-            self.tstep = int(s[2 * B])
-            self.length = int(s[2 * B + 1])
-        newly = np.nonzero(done_new & ~self.done)[0]
-        events = []
-        if newly.size:
-            out_h = np.asarray(self.out)        # [B, max_new], small
-            events = [(int(i), out_h[i, :idx_new[i]].tolist())
-                      for i in newly]
+        # batched multi-trace span: one wall-clock interval, one event
+        # per live request.  Guarded on tr.enabled so the disabled path
+        # makes zero clock reads (NULL_SPAN; see tests/test_obs.py)
+        tr = obs_trace.get_tracer()
+        sp = obs_trace.NULL_SPAN
+        if tr.enabled:
+            tif = int(self.lengths[live].sum()) if self.paged \
+                else int(live.sum()) * self.length
+            sp = tr.span("decode_segment",
+                         traces=[self.traces.get(int(i))
+                                 for i in np.nonzero(live)[0]],
+                         rows=int(live.sum()), tokens_in_flight=tif,
+                         drain=bool(drain))
+        with sp:
             if self.paged:
-                # a finished row's blocks go straight back to the pool;
-                # the frozen row never reads or writes them again
-                # (decode runs it with active=False)
-                for i in newly:
-                    self._release_slot(int(i))
-        self.done = done_new
-        self.idx = idx_new.astype(np.int32)
-        self.segments += 1
+                cap = None
+                nbc = self.eng._cont_nb_cap(
+                    int((self.lengths[live] + rem).max()) + 2)
+            else:
+                cap = self.eng._cont_kv_cap(self.length + int(rem.max()) + 2)
+                nbc = None
+            (self.tok, self._done_d, self._rem_d, self._idx_d, self.out,
+             self.cache, summary) = self.eng._decode_cont(
+                self.eng.params, self.tok, self.cache, self._seg_key,
+                self._done_d, self._rem_d, self._idx_d, self.out,
+                jnp.int32(self.tstep), jnp.asarray(drain), gp=self.gen,
+                kv_cap=cap, nb_cap=nbc)
+            s = np.asarray(summary)             # the one per-segment sync
+            done_new = s[:B].astype(bool)
+            idx_new = s[B:2 * B]
+            if self.paged:
+                self.lengths = s[2 * B:3 * B].astype(np.int64)
+                self.tstep = int(s[3 * B])
+                self.length = int(self.lengths.max())
+            else:
+                self.tstep = int(s[2 * B])
+                self.length = int(s[2 * B + 1])
+            newly = np.nonzero(done_new & ~self.done)[0]
+            events = []
+            if newly.size:
+                out_h = np.asarray(self.out)    # [B, max_new], small
+                events = [(int(i), out_h[i, :idx_new[i]].tolist())
+                          for i in newly]
+                if self.paged:
+                    # a finished row's blocks go straight back to the
+                    # pool; the frozen row never reads or writes them
+                    # again (decode runs it with active=False)
+                    for i in newly:
+                        self._release_slot(int(i))
+            self.done = done_new
+            self.idx = idx_new.astype(np.int32)
+            self.segments += 1
+            sp.set(finished=len(events), tstep=self.tstep)
         return events

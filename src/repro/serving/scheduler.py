@@ -31,6 +31,9 @@ from typing import Dict, Iterable, List, Optional, Sequence
 import jax
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import percentile
 from repro.serving.engine import ContinuousSession, ServeEngine
 from repro.serving.sampling import GenerationParams
 
@@ -57,10 +60,29 @@ class QueueStats:
     tokens_out: int = 0
     slots_run: int = 0        # batch slots dispatched (incl. idle padding)
     slots_used: int = 0       # slots that held a real request
+    latency_s: List[float] = field(default_factory=list)  # per request
+    # (a wave's requests all finish together, so each request's latency
+    # is its wave's wall time)
 
     @property
     def slot_utilization(self) -> float:
         return self.slots_used / self.slots_run if self.slots_run else 0.0
+
+    @property
+    def latency_mean(self) -> float:
+        return float(np.mean(self.latency_s)) if self.latency_s else 0.0
+
+    @property
+    def latency_p50(self) -> float:
+        return percentile(self.latency_s, 50)
+
+    @property
+    def latency_p95(self) -> float:
+        return percentile(self.latency_s, 95)
+
+    @property
+    def latency_p99(self) -> float:
+        return percentile(self.latency_s, 99)
 
 
 class RequestQueue:
@@ -124,8 +146,10 @@ class RequestQueue:
         taken = {r.rid for r in wave}
         self._pending = [r for r in self._pending if r.rid not in taken]
         wave_key = jax.random.fold_in(self._key, self.stats.waves)
+        t0 = time.perf_counter()
         outs = self.engine.generate([r.prompt for r in wave], gen=self.gen,
                                     key=wave_key)
+        elapsed = time.perf_counter() - t0
         bucket = self.engine.prompt_bucket(
             max(len(r.prompt) for r in wave), self.gen.max_new_tokens)
         completions = []
@@ -139,13 +163,18 @@ class RequestQueue:
         self.stats.tokens_out += sum(len(t) for t in outs)
         self.stats.slots_run += self.engine.batch_size
         self.stats.slots_used += len(wave)
+        self.stats.latency_s.extend([elapsed] * len(wave))
         return completions
 
     def run(self) -> Dict[int, List[int]]:
         """Drain the queue; returns {rid: generated tokens} for every
         completed request (including ones finished in earlier steps)."""
-        while self._pending:
-            self.step()
+        self.engine.start_profile()
+        try:
+            while self._pending:
+                self.step()
+        finally:
+            self.engine.stop_profile()
         return {rid: c.tokens for rid, c in self._done.items()}
 
     def result(self, rid: int) -> Completion:
@@ -177,12 +206,18 @@ class ContinuousStats:
     refills: int = 0              # mid-frame per-slot swaps
     prefix_hits: int = 0          # prefix-cache hits (paged sessions)
     prefix_misses: int = 0        # prefix-cache misses (paged sessions)
+    prefix_evictions: int = 0     # prefix entries LRU-evicted for space
+    admission_skips: int = 0      # pending requests passed over (no fit)
+    shed: int = 0                 # requests truncated at intake to fit
     ttft_s: List[float] = field(default_factory=list)
     latency_s: List[float] = field(default_factory=list)
 
-    @staticmethod
-    def _pct(xs: List[float], q: float) -> float:
-        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+    # the one shared empty-safe percentile (obs.metrics.percentile)
+    _pct = staticmethod(percentile)
+
+    @property
+    def ttft_mean(self) -> float:
+        return float(np.mean(self.ttft_s)) if self.ttft_s else 0.0
 
     @property
     def ttft_p50(self) -> float:
@@ -193,12 +228,24 @@ class ContinuousStats:
         return self._pct(self.ttft_s, 95)
 
     @property
+    def ttft_p99(self) -> float:
+        return self._pct(self.ttft_s, 99)
+
+    @property
+    def latency_mean(self) -> float:
+        return float(np.mean(self.latency_s)) if self.latency_s else 0.0
+
+    @property
     def latency_p50(self) -> float:
         return self._pct(self.latency_s, 50)
 
     @property
     def latency_p95(self) -> float:
         return self._pct(self.latency_s, 95)
+
+    @property
+    def latency_p99(self) -> float:
+        return self._pct(self.latency_s, 99)
 
 
 @dataclass
@@ -207,6 +254,9 @@ class _ContRequest:
     prompt: List[int]
     budget: int
     prefix_len: int = 0           # retrieved-context prefix (0 = none)
+    trace: Optional[str] = None   # obs trace id (None = untraced)
+    t_submit: float = 0.0         # perf_counter at submit (0 = untraced)
+    t_admit: float = 0.0          # perf_counter at admission
 
 
 class ContinuousQueue:
@@ -256,7 +306,8 @@ class ContinuousQueue:
 
     def submit(self, prompt: Sequence[int],
                max_new_tokens: Optional[int] = None,
-               prefix_len: Optional[int] = None) -> int:
+               prefix_len: Optional[int] = None,
+               trace: Optional[str] = None) -> int:
         rid = self._next_rid
         self._next_rid += 1
         budget = self.gen.max_new_tokens if max_new_tokens is None \
@@ -274,9 +325,12 @@ class ContinuousQueue:
         cap = self.engine.cont_max_prompt_len(self.gen.max_new_tokens)
         if len(prompt) > cap:
             prompt, prefix_len = self._truncate(prompt, prefix_len, cap)
+            self.stats.shed += 1
         if self.engine.paged:
             self._check_block_span(prompt, prefix_len, budget)
-        self._pending.append(_ContRequest(rid, prompt, budget, prefix_len))
+        self._pending.append(_ContRequest(
+            rid, prompt, budget, prefix_len, trace=trace,
+            t_submit=obs_trace.get_tracer().now()))
         return rid
 
     def _truncate(self, prompt: List[int], prefix_len: int,
@@ -348,8 +402,11 @@ class ContinuousQueue:
         """Next pending request that fits the live frame: first fit
         (FIFO-with-skip) or cheapest prefill among the fits (SJF)."""
         def fits(r):
-            return session.can_refill(len(r.prompt), r.budget,
-                                      r.prefix_len or None, r.prompt)
+            ok = session.can_refill(len(r.prompt), r.budget,
+                                    r.prefix_len or None, r.prompt)
+            if not ok:
+                self.stats.admission_skips += 1
+            return ok
         if self.policy == "fifo":
             for r in self._pending:
                 if fits(r):
@@ -370,7 +427,9 @@ class ContinuousQueue:
         included), so they compose across requests like a serving
         trace."""
         t0 = time.perf_counter()
+        tr = obs_trace.get_tracer()
         paged = self.engine.paged
+        base = self._stats_base()
         session = ContinuousSession(
             self.engine, self.gen, key=self._key,
             prefix_cache=self.prefix_capacity if paged else None)
@@ -378,67 +437,148 @@ class ContinuousQueue:
 
         def admit(slot: int, r: _ContRequest) -> None:
             owner[slot] = r
-            now = time.perf_counter() - t0
+            abs_now = time.perf_counter()
+            now = abs_now - t0
+            if tr.enabled:
+                session.traces[slot] = r.trace
+                if r.trace is not None and r.t_submit:
+                    # queue wait becomes a retroactive span: admission is
+                    # the only point where both endpoints are known
+                    tr.emit("queue_wait", r.trace, r.t_submit, abs_now,
+                            slot=slot)
+            r.t_admit = abs_now
             self.stats.ttft_s.append(now)
             self._done[r.rid] = ContinuousCompletion(
                 r.rid, [], len(r.prompt), r.budget, slot,
                 session.frames, now, now)
 
-        while self._pending or session.active():
-            if not session.active() and (not paged or session.cache is None):
-                # non-paged sessions restart a frame whenever the batch
-                # drains; a paged session only ever opens ONE frame (the
-                # pool persists, so admission continues through refill
-                # below — restarting would drop the prefix cache)
-                n = max(1, session.frame_capacity(
-                    [(len(r.prompt), r.budget) for r in self._pending])) \
-                    if paged else session.B
-                if paged and any(r.prefix_len for r in self._pending):
-                    # frame prefill bypasses the prefix cache (rows are
-                    # packed left-padded, not in canonical prefix
-                    # layout); open the frame with one row so the rest
-                    # admit through cache-aware refill and shared
-                    # contexts fork instead of re-prefilling
-                    n = 1
-                batch = self._pending[:n]
-                del self._pending[:len(batch)]
-                session.begin_frame([r.prompt for r in batch],
-                                    [r.budget for r in batch])
-                for slot, r in enumerate(batch):
+        self.engine.start_profile()
+        try:
+            while self._pending or session.active():
+                if not session.active() \
+                        and (not paged or session.cache is None):
+                    # non-paged sessions restart a frame whenever the batch
+                    # drains; a paged session only ever opens ONE frame (the
+                    # pool persists, so admission continues through refill
+                    # below — restarting would drop the prefix cache)
+                    n = max(1, session.frame_capacity(
+                        [(len(r.prompt), r.budget) for r in self._pending])) \
+                        if paged else session.B
+                    if paged and any(r.prefix_len for r in self._pending):
+                        # frame prefill bypasses the prefix cache (rows are
+                        # packed left-padded, not in canonical prefix
+                        # layout); open the frame with one row so the rest
+                        # admit through cache-aware refill and shared
+                        # contexts fork instead of re-prefilling
+                        n = 1
+                    batch = self._pending[:n]
+                    del self._pending[:len(batch)]
+                    if tr.enabled:
+                        for slot, r in enumerate(batch):
+                            session.traces[slot] = r.trace
+                    with tr.span("prefill", traces=[r.trace for r in batch],
+                                 mode="frame", rows=len(batch)):
+                        session.begin_frame([r.prompt for r in batch],
+                                            [r.budget for r in batch])
+                    for slot, r in enumerate(batch):
+                        admit(slot, r)
+                    continue
+                if session.active():
+                    for slot, tokens in session.run_segment(
+                            drain=not self._pending):
+                        r = owner.pop(slot)
+                        abs_now = time.perf_counter()
+                        now = abs_now - t0
+                        c = self._done[r.rid]
+                        c.tokens, c.done_s = tokens, now
+                        self.stats.tokens_out += len(tokens)
+                        self.stats.latency_s.append(now)
+                        if tr.enabled:
+                            session.traces.pop(slot, None)
+                            if r.trace is not None and r.t_admit:
+                                tr.emit("decode", r.trace, r.t_admit,
+                                        abs_now, tokens=len(tokens),
+                                        slot=slot)
+                    if paged and tr.enabled:
+                        obs_metrics.registry().gauge(
+                            "kv_pool_fragmentation").set(
+                                session.pool_fragmentation())
+                admitted = 0
+                for slot in session.free_slots():
+                    r = self._admissible(session)
+                    if r is None:
+                        break
+                    self._pending.remove(r)
+                    if tr.enabled:
+                        session.traces[slot] = r.trace
+                    with tr.span("prefill", trace=r.trace, mode="refill",
+                                 slot=slot, prompt_len=len(r.prompt),
+                                 prefix_len=r.prefix_len):
+                        session.refill(slot, r.prompt, r.budget,
+                                       prefix_len=r.prefix_len or None)
+                    admitted += 1
                     admit(slot, r)
-                continue
-            if session.active():
-                for slot, tokens in session.run_segment(
-                        drain=not self._pending):
-                    r = owner.pop(slot)
-                    now = time.perf_counter() - t0
-                    c = self._done[r.rid]
-                    c.tokens, c.done_s = tokens, now
-                    self.stats.tokens_out += len(tokens)
-                    self.stats.latency_s.append(now)
-            admitted = 0
-            for slot in session.free_slots():
-                r = self._admissible(session)
-                if r is None:
-                    break
-                self._pending.remove(r)
-                session.refill(slot, r.prompt, r.budget,
-                               prefix_len=r.prefix_len or None)
-                admitted += 1
-                admit(slot, r)
-            if paged and self._pending and not admitted \
-                    and not session.active():
-                raise RuntimeError(
-                    "paged admission stalled: a pending request cannot "
-                    "be scheduled even into an idle frame")
+                if paged and self._pending and not admitted \
+                        and not session.active():
+                    raise RuntimeError(
+                        "paged admission stalled: a pending request cannot "
+                        "be scheduled even into an idle frame")
+        finally:
+            self.engine.stop_profile()
         self.stats.frames += session.frames
         self.stats.segments += session.segments
         self.stats.refills += session.refills
         if session.prefix_cache is not None:
             self.stats.prefix_hits += session.prefix_cache.hits
             self.stats.prefix_misses += session.prefix_cache.misses
+            self.stats.prefix_evictions += session.prefix_cache.evictions
+        if tr.enabled:
+            self._push_metrics(session, base)
         session.release()
         return {rid: c.tokens for rid, c in self._done.items()}
+
+    def _stats_base(self) -> Dict[str, int]:
+        """Snapshot of the cumulative stats counters at run() entry, so
+        the metrics push only reports THIS run's deltas."""
+        s = self.stats
+        return {"tokens_out": s.tokens_out,
+                "admission_skips": s.admission_skips, "shed": s.shed,
+                "ttft_n": len(s.ttft_s), "latency_n": len(s.latency_s)}
+
+    def _push_metrics(self, session: ContinuousSession,
+                      base: Dict[str, int]) -> None:
+        """Roll this run's deltas into the global metrics registry.
+        Host-side and post-drain only — never on the segment hot path."""
+        reg = obs_metrics.registry()
+        s = self.stats
+        reg.counter("queue_requests_admitted", policy=self.policy).inc(
+            len(s.ttft_s) - base["ttft_n"])
+        reg.counter("queue_admission_skips").inc(
+            s.admission_skips - base["admission_skips"])
+        reg.counter("queue_shed").inc(s.shed - base["shed"])
+        reg.counter("queue_tokens_out").inc(
+            s.tokens_out - base["tokens_out"])
+        h = reg.histogram("queue_ttft_s")
+        for v in s.ttft_s[base["ttft_n"]:]:
+            h.observe(v)
+        h = reg.histogram("queue_latency_s")
+        for v in s.latency_s[base["latency_n"]:]:
+            h.observe(v)
+        if session.paged:
+            alloc = session.allocator
+            reg.gauge("kv_pool_utilization").set(alloc.utilization())
+            reg.gauge("kv_pool_high_watermark").set(alloc.high_watermark)
+            # the session's allocator / prefix cache are fresh per run,
+            # so their lifetime totals ARE this run's deltas
+            reg.counter("kv_pool_cow_forks").inc(alloc.forks)
+            reg.counter("kv_pool_exhaustion_waits").inc(alloc.exhaustions)
+            if session.prefix_cache is not None:
+                reg.counter("prefix_cache_hits").inc(
+                    session.prefix_cache.hits)
+                reg.counter("prefix_cache_misses").inc(
+                    session.prefix_cache.misses)
+                reg.counter("prefix_cache_evictions").inc(
+                    session.prefix_cache.evictions)
 
     def result(self, rid: int) -> ContinuousCompletion:
         return self._done[rid]

@@ -75,6 +75,30 @@ def test_block_allocator_errors_and_backpressure():
         cache_lib.BlockAllocator(0)
 
 
+def test_block_allocator_utilization_and_watermark():
+    a = cache_lib.BlockAllocator(8)
+    assert a.utilization() == 0.0 and a.high_watermark == 0
+    ids = a.alloc(5)
+    assert a.in_use == 5
+    assert a.utilization() == pytest.approx(5 / 8)
+    assert a.high_watermark == 5
+    a.free(ids[:3])
+    assert a.utilization() == pytest.approx(2 / 8)
+    assert a.high_watermark == 5              # watermark never recedes
+    more = a.alloc(4)
+    assert a.high_watermark == 6
+    shared = a.fork(more[:2])
+    assert a.forks == 2                       # COW shares counted
+    assert a.in_use == 6                      # forks add owners, not blocks
+    assert a.can_alloc(2) and a.exhaustions == 0
+    assert not a.can_alloc(5)
+    assert a.exhaustions == 1                 # failed probes counted
+    a.free(more)
+    a.free(shared)
+    a.free(ids[3:])
+    assert a.utilization() == 0.0 and a.available == 8
+
+
 def test_block_allocator_recycle_no_leak():
     a = cache_lib.BlockAllocator(3)
     for _ in range(5):

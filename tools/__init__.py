@@ -1,0 +1,1 @@
+# makes tools/ importable (benchmarks reuse trace_report's loaders)

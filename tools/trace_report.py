@@ -1,0 +1,273 @@
+#!/usr/bin/env python
+"""Read a flight-recorder JSONL dump: span trees, stage latencies,
+metrics rollups, and a CI validity check.
+
+    python tools/trace_report.py TRACE.jsonl              # full report
+    python tools/trace_report.py TRACE.jsonl --tree q3    # one span tree
+    python tools/trace_report.py TRACE.jsonl --check      # CI gate
+
+``--check`` exits non-zero unless the dump parses, every span is
+closed with ``t1 >= t0``, parents resolve (when nothing was dropped
+from the ring), at least one span exists, per-trace stage order is
+causal (retrieve before prefill before decode), and at least
+``--min-complete`` of the request-rooted traces contain the full
+stage set (identify, route, retrieve, prefill, decode, detokenize).
+
+Zero dependencies beyond the stdlib, so it runs anywhere the dump
+lands — no PYTHONPATH or jax required.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+# the stages every completed query's trace must contain to count as a
+# fully reconstructed causal tree (docs/OBSERVABILITY.md, span taxonomy)
+REQUIRED_STAGES = ("identify", "route", "retrieve", "prefill", "decode",
+                   "detokenize")
+
+
+def load(path: str) -> Tuple[Optional[dict], List[dict], List[str]]:
+    """-> (meta line, events, parse errors)."""
+    meta, events, errors = None, [], []
+    with open(path) as f:
+        for i, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                ev = json.loads(line)
+            except json.JSONDecodeError as e:
+                errors.append(f"line {i}: invalid JSON ({e})")
+                continue
+            if not isinstance(ev, dict):
+                errors.append(f"line {i}: not an object")
+            elif ev.get("kind") == "meta":
+                meta = ev
+            else:
+                events.append(ev)
+    return meta, events, errors
+
+
+def spans_by_trace(events: List[dict]) -> Dict[str, List[dict]]:
+    out: Dict[str, List[dict]] = defaultdict(list)
+    for e in events:
+        if e.get("kind") in ("span", "event"):
+            out[str(e.get("trace"))].append(e)
+    return out
+
+
+def _pct(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    k = (len(xs) - 1) * q / 100.0
+    lo, hi = int(k), min(int(k) + 1, len(xs) - 1)
+    return xs[lo] + (xs[hi] - xs[lo]) * (k - lo)
+
+
+def stage_breakdown(events: List[dict]) -> List[Tuple[str, int, float,
+                                                      float, float, float]]:
+    """-> rows of (stage, count, mean/p50/p95/p99 ms) over all spans."""
+    durs: Dict[str, List[float]] = defaultdict(list)
+    for e in events:
+        if e.get("kind") == "span" and e.get("t1") is not None:
+            durs[e["name"]].append((e["t1"] - e["t0"]) * 1e3)
+    rows = []
+    for name in sorted(durs, key=lambda n: -sum(durs[n])):
+        d = durs[name]
+        rows.append((name, len(d), sum(d) / len(d), _pct(d, 50),
+                     _pct(d, 95), _pct(d, 99)))
+    return rows
+
+
+def completeness(events: List[dict]) -> Tuple[int, int, float]:
+    """-> (#complete, #request-rooted traces, fraction complete).
+    A trace counts once it has a ``request`` root; it is complete when
+    it contains every required stage."""
+    by_trace = spans_by_trace(events)
+    rooted = complete = 0
+    for tid, evs in by_trace.items():
+        if tid == "-":
+            continue                       # untraced background spans
+        names = {e["name"] for e in evs}
+        if "request" not in names:
+            continue
+        rooted += 1
+        if all(s in names for s in REQUIRED_STAGES):
+            complete += 1
+    return complete, rooted, (complete / rooted if rooted else 0.0)
+
+
+def check(meta: Optional[dict], events: List[dict],
+          errors: List[str], min_complete: float) -> List[str]:
+    """-> list of problems (empty = dump is valid)."""
+    probs = list(errors)
+    if meta is None:
+        probs.append("missing meta line")
+    dropped = int(meta.get("dropped", 0)) if meta else 0
+    ids = set()
+    nspans = 0
+    for e in events:
+        kind = e.get("kind")
+        if kind == "metrics":
+            if "t" not in e or "data" not in e:
+                probs.append("metrics record missing t/data")
+            continue
+        if kind not in ("span", "event"):
+            probs.append(f"unknown record kind {kind!r}")
+            continue
+        for f in ("trace", "id", "name"):
+            if f not in e:
+                probs.append(f"{kind} record missing {f!r}")
+        ids.add(e.get("id"))
+        if kind == "event":
+            if "t" not in e:
+                probs.append(f"event {e.get('name')} missing t")
+            continue
+        nspans += 1
+        if e.get("t0") is None or e.get("t1") is None:
+            probs.append(f"unclosed span {e.get('name')} "
+                         f"(id {e.get('id')})")
+        elif e["t1"] < e["t0"]:
+            probs.append(f"span {e.get('name')} ends before it starts")
+    if nspans == 0:
+        probs.append("no spans in dump (empty trace)")
+    if dropped == 0:
+        # parents only have to resolve when the ring kept everything
+        for e in events:
+            p = e.get("parent")
+            if p is not None and p not in ids:
+                probs.append(f"{e.get('kind')} {e.get('name')} has "
+                             f"unresolved parent {p}")
+    # per-trace causal stage order: a stage pipeline can only move
+    # forward in time (retrieval happens before the prompt prefills,
+    # which happens before its decode interval opens)
+    for tid, evs in spans_by_trace(events).items():
+        t0s: Dict[str, float] = {}
+        for e in evs:
+            if e.get("kind") == "span" and e.get("t0") is not None:
+                t0s.setdefault(e["name"], e["t0"])
+                t0s[e["name"]] = min(t0s[e["name"]], e["t0"])
+        for a, b in (("retrieve", "prefill"), ("prefill", "decode")):
+            if a in t0s and b in t0s and t0s[a] > t0s[b]:
+                probs.append(f"trace {tid}: {b} starts before {a}")
+    comp, rooted, frac = completeness(events)
+    if rooted and frac < min_complete:
+        probs.append(f"only {comp}/{rooted} request traces are complete "
+                     f"({frac:.1%} < {min_complete:.1%})")
+    return probs
+
+
+def print_tree(events: List[dict], trace: Optional[str] = None) -> None:
+    by_trace = spans_by_trace(events)
+    if trace is None:
+        rooted = [t for t, evs in sorted(by_trace.items())
+                  if t != "-" and any(e["name"] == "request" for e in evs)]
+        trace = rooted[0] if rooted else next(iter(sorted(by_trace)), None)
+    evs = by_trace.get(str(trace), [])
+    if not evs:
+        print(f"trace {trace!r}: no events")
+        return
+    kids: Dict[Optional[int], List[dict]] = defaultdict(list)
+    known = {e["id"] for e in evs}
+    for e in evs:
+        p = e.get("parent")
+        kids[p if p in known else None].append(e)
+    for c in kids.values():
+        c.sort(key=lambda e: e.get("t0", e.get("t", 0.0)))
+    base = min(e.get("t0", e.get("t", 0.0)) for e in evs)
+
+    def walk(e, depth):
+        pad = "  " * depth
+        attrs = e.get("attrs") or {}
+        astr = " ".join(f"{k}={v}" for k, v in attrs.items())
+        if e["kind"] == "span":
+            dur = (e["t1"] - e["t0"]) * 1e3 if e.get("t1") is not None \
+                else float("nan")
+            at = (e["t0"] - base) * 1e3
+            print(f"{pad}{e['name']}  +{at:.1f}ms  {dur:.2f}ms"
+                  + (f"  [{astr}]" if astr else ""))
+        else:
+            at = (e["t"] - base) * 1e3
+            print(f"{pad}* {e['name']}  +{at:.1f}ms"
+                  + (f"  [{astr}]" if astr else ""))
+        for c in kids.get(e["id"], []):
+            walk(c, depth + 1)
+
+    print(f"trace {trace}")
+    for root in kids[None]:
+        walk(root, 1)
+
+
+def print_report(path: str, meta: Optional[dict],
+                 events: List[dict]) -> None:
+    nspans = sum(1 for e in events if e.get("kind") == "span")
+    nevents = sum(1 for e in events if e.get("kind") == "event")
+    print(f"{path}: {nspans} spans, {nevents} events, "
+          f"{len(spans_by_trace(events))} traces"
+          + (f", {meta.get('dropped', 0)} dropped" if meta else ""))
+    comp, rooted, frac = completeness(events)
+    if rooted:
+        print(f"complete request traces: {comp}/{rooted} ({frac:.1%})")
+    rows = stage_breakdown(events)
+    if rows:
+        print(f"\n{'stage':<16}{'count':>7}{'mean ms':>10}"
+              f"{'p50 ms':>10}{'p95 ms':>10}{'p99 ms':>10}")
+        for name, n, mean, p50, p95, p99 in rows:
+            print(f"{name:<16}{n:>7}{mean:>10.2f}{p50:>10.2f}"
+                  f"{p95:>10.2f}{p99:>10.2f}")
+    last = None
+    for e in events:
+        if e.get("kind") == "metrics":
+            last = e
+    if last:
+        print("\nmetrics (final snapshot):")
+        for k in sorted(last["data"]):
+            v = last["data"][k]
+            if isinstance(v, dict):      # histogram summary
+                v = " ".join(f"{a}={v[a]:.4g}" if isinstance(v[a], float)
+                             else f"{a}={v[a]}" for a in
+                             ("count", "mean", "p50", "p99", "max")
+                             if a in v)
+            print(f"  {k}: {v}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="flight-recorder JSONL dump")
+    ap.add_argument("--check", action="store_true",
+                    help="validate the dump; non-zero exit on problems")
+    ap.add_argument("--min-complete", type=float, default=0.95,
+                    help="--check: minimum fraction of request traces "
+                         "with the full stage set (default 0.95)")
+    ap.add_argument("--tree", nargs="?", const="", metavar="TRACE_ID",
+                    help="print one trace's span tree (default: first "
+                         "request-rooted trace)")
+    args = ap.parse_args(argv)
+
+    meta, events, errors = load(args.trace)
+    if args.check:
+        probs = check(meta, events, errors, args.min_complete)
+        if probs:
+            for p in probs[:40]:
+                print(f"FAIL: {p}")
+            if len(probs) > 40:
+                print(f"... and {len(probs) - 40} more")
+            return 1
+        comp, rooted, frac = completeness(events)
+        print(f"OK: {sum(1 for e in events if e.get('kind') == 'span')} "
+              f"spans valid; {comp}/{rooted} request traces complete")
+        return 0
+    if args.tree is not None:
+        print_tree(events, args.tree or None)
+        return 0
+    print_report(args.trace, meta, events)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
