@@ -60,6 +60,8 @@ class LiveNodeStats:
     refills: int = 0                  # continuous per-slot swaps
     queries: int = 0
     drops: int = 0
+    shed: int = 0                     # dropped up-front by the SLO shed hint
+    kv_exhaustions: int = 0           # paged KV-pool exhaustion waits
     tokens_out: int = 0
     retrieval_s: float = 0.0
     generate_s: float = 0.0
@@ -115,6 +117,7 @@ class LiveEdgeNode:
         self.cache = cache
         self.federation = None        # set by federation.enable_federation
         self.capacity: Optional[CapacityFunction] = None
+        self.shed_fraction = 0.0      # SLO shed hint, set by ClusterRuntime
         self.stats = LiveNodeStats()
         self.last_contexts: Dict[int, List[str]] = {}
         self.last_sources: Dict[int, List[int]] = {}
@@ -205,6 +208,7 @@ class LiveEdgeNode:
             # shared retrieved-context prefix instead of re-prefilling
             queue = ContinuousQueue(self.engine, self.gen, key=slot_key,
                                     policy=self.admission)
+            queue.set_shed(self.shed_fraction)
             cap = self.engine.cont_max_prompt_len(self.gen.max_new_tokens)
             rids = []
             for q, c, tid in zip(queries, contexts, tids):
@@ -218,6 +222,8 @@ class LiveEdgeNode:
             self.stats.prefix_hits += queue.stats.prefix_hits
             self.stats.prefix_misses += queue.stats.prefix_misses
             self.stats.prefix_evictions += queue.stats.prefix_evictions
+            self.stats.shed += queue.stats.shed_hint_drops
+            self.stats.kv_exhaustions += queue.stats.kv_exhaustions
             for rid in rids:
                 done_s[rid] = queue.result(rid).done_s
         else:
@@ -246,7 +252,9 @@ class LiveEdgeNode:
             with tr.span("detokenize", trace=tid,
                          tokens=len(comp.tokens)):
                 answer = self.tok.decode(comp.tokens)
-            dropped = latency > slo_s
+            # a shed request never ran: it is a drop by decision, not by
+            # the SLO clock
+            dropped = getattr(comp, "shed", False) or latency > slo_s
             quality = 0.0 if dropped else composite_quality(answer,
                                                             q.reference)
             self.last_contexts[q.qid] = ctx
@@ -256,7 +264,7 @@ class LiveEdgeNode:
             results.append(QueryResult(q.qid, self.node_id, self.arch,
                                        quality, dropped,
                                        latency_s=latency, answer=answer))
-        if tr.enabled:
+        if obs_metrics.metrics_enabled():
             self._push_metrics(queue, t_retrieval, results)
         return results
 
@@ -271,10 +279,20 @@ class LiveEdgeNode:
             sum(r.dropped for r in results))
         reg.counter("node_tokens_out", node=node).inc(
             queue.stats.tokens_out)
+        # the queue is fresh per slot, so its stats ARE this slot's deltas
+        reg.counter("node_shed", node=node).inc(
+            getattr(queue.stats, "shed_hint_drops", 0))
+        reg.counter("node_kv_exhaustions", node=node).inc(
+            getattr(queue.stats, "kv_exhaustions", 0))
         reg.histogram("node_retrieval_s", node=node).observe(t_retrieval)
         h = reg.histogram("node_latency_s", node=node)
         for r in results:
             h.observe(r.latency_s)
+        h = reg.histogram("node_ttft_s", node=node)
+        for v in getattr(queue.stats, "ttft_s", []):
+            # queue TTFT is measured from run() start; the node's
+            # request clock starts at retrieval
+            h.observe(t_retrieval + v)
         if self.cache is not None:
             reg.gauge("semantic_cache_hit_rate", node=node).set(
                 self.cache.hit_rate)

@@ -106,7 +106,7 @@ class Coordinator:
                 assign, props = self._route(probs, slo_s)
             results = self._dispatch(queries, assign, slo_s)
             scores = self._feedback(embs, assign, queries, results)
-        if tr.enabled:
+        if obs_metrics.metrics_enabled():
             self._push_metrics(props, scores, slo_s)
         return props, results, scores
 

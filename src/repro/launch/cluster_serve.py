@@ -14,6 +14,8 @@ latency/quality/drop metrics.
     ... --index ivf --nprobe 3   # ANN retrieval instead of the flat scan
     ... --federated --cache      # cross-node retrieval + semantic cache
     ... --ckpt experiments/tiny_lm.npz   # trained generator weights
+    ... --metrics-port 0 --dashboard     # /metrics + /health + live rollup
+    ... --no-slo-feedback        # monitors report but don't steer routing
 """
 import argparse
 import json
@@ -178,11 +180,31 @@ def main():
                          "flight-recorder JSONL dump here at exit "
                          "(read it with tools/trace_report.py)")
     ap.add_argument("--metrics-every", type=int, default=0, metavar="N",
-                    help="with --trace-out: print a metrics rollup "
-                         "every N slots (0 = only record, never print)")
+                    help="print a metrics-delta rollup every N slots "
+                         "(0 = never print)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    metavar="PORT",
+                    help="serve /metrics (Prometheus text) and /health "
+                         "(SLO verdict JSON) on this port for the whole "
+                         "run (0 = pick a free port); the endpoint is "
+                         "self-probed before exit")
+    ap.add_argument("--dashboard", action="store_true",
+                    help="print a live per-node telemetry rollup "
+                         "(rates, windowed percentiles, SLO state) "
+                         "after every slot")
+    ap.add_argument("--no-slo-feedback", action="store_true",
+                    help="ablation: keep the SLO monitors (so /health "
+                         "still reports) but sever their feedback into "
+                         "inter-node routing and admission shedding")
+    ap.add_argument("--shed-fraction", type=float, default=0.25,
+                    help="fraction of a FIRING node's backlog its queue "
+                         "sheds per slot")
     args = ap.parse_args()
 
     rec = obs.enable() if args.trace_out else None
+    # registry pushes stay on for the whole run: the SLO monitors, the
+    # /metrics endpoint, and the dashboard all read from it
+    obs.enable_metrics(True)
 
     t0 = time.time()
     entities = args.entities or (8 if args.smoke else 24)
@@ -208,7 +230,17 @@ def main():
 
     runtime = ClusterRuntime(nodes, ident,
                              use_inter_node=not args.no_inter_node,
-                             seed=args.seed)
+                             seed=args.seed,
+                             slo_feedback=not args.no_slo_feedback,
+                             shed_fraction=args.shed_fraction)
+    srv = None
+    if args.metrics_port is not None:
+        srv = obs.TelemetryServer(
+            metrics_fn=lambda: obs.to_prometheus(
+                obs.registry().snapshot(), obs.registry()),
+            health_fn=runtime.health, port=args.metrics_port).start()
+        print(f"telemetry: /metrics and /health at {srv.url()}",
+              flush=True)
     print("profiling measured node throughput ...", flush=True)
     runtime.initialize()
     for node in nodes:
@@ -225,14 +257,15 @@ def main():
     workload = LiveWorkload(qas, encoder, seed=args.seed + 2)
 
     on_slot = None
-    if rec is not None:
+    if rec is not None or args.metrics_every or args.dashboard:
         reg = obs.registry()
         last_snap = [reg.snapshot()]
 
         def on_slot(t, m):
             d = reg.delta(last_snap[0])
             last_snap[0] = reg.snapshot()
-            rec.record_metrics(last_snap[0], obs.get_tracer().now())
+            if rec is not None:
+                rec.record_metrics(last_snap[0], obs.get_tracer().now())
             if args.metrics_every and (t + 1) % args.metrics_every == 0:
                 scalars = {k: v for k, v in d.items()
                            if not isinstance(v, dict)}
@@ -240,6 +273,9 @@ def main():
                     f"{k}={v:.3g}" if isinstance(v, float) else f"{k}={v}"
                     for k, v in sorted(scalars.items()))
                 print(f"  metrics[slot {t}]: {line}", flush=True)
+            if args.dashboard and runtime.store is not None:
+                print(obs.render_dashboard(runtime.store,
+                                           runtime.monitors), flush=True)
 
     report = replay_trace(runtime, workload, n_slots=args.slots,
                           slo_s=args.slo, base_volume=args.per_slot,
@@ -263,10 +299,24 @@ def main():
         rounds = "frames" if args.queue == "continuous" else "waves"
         if args.queue == "continuous":
             extra += f", {st.refills} refills"
+        if st.shed:
+            extra += f", {st.shed} shed"
         print(f"  node {node.node_id} [{node.arch}]: {st.queries} queries "
               f"in {st.waves} {rounds}, {st.tokens_out} tokens, "
               f"{st.drops} drops, {st.queries_per_s:.1f} q/s measured"
               + extra)
+    if runtime.monitors:
+        h = runtime.health()
+        print(f"slo: status={h['status']} "
+              f"feedback={'on' if runtime.slo_feedback else 'OFF'} "
+              f"firing_nodes={h['firing_nodes'] or '[]'}")
+        for nid in sorted(runtime.monitors, key=str):
+            mon = runtime.monitors[nid]
+            trans = sum(s.transitions for s in mon.states.values())
+            firing = mon.firing()
+            state = "FIRING:" + ",".join(firing) if firing else "OK"
+            print(f"  node {nid}: {state} ({trans} objective "
+                  f"transition{'s' if trans != 1 else ''})")
     if args.federated:
         fs = nodes[0].federation.stats
         print(f"federation: {fs.shard_probes} shard probes "
@@ -280,7 +330,38 @@ def main():
         print(f"trace: {rec.span_count()} spans "
               f"({len(rec)} events, {rec.dropped} dropped) "
               f"-> {args.trace_out}")
+    if srv is not None:
+        _probe_endpoint(srv)
+        srv.stop()
     print(f"total {time.time() - t0:.0f}s")
+
+
+def _probe_endpoint(srv) -> None:
+    """Self-probe the telemetry endpoint before exit so CI (and any
+    scripted run) asserts well-formed exposition without a second
+    process: fetch /metrics and round-trip it through the parser, fetch
+    /health and check the verdict JSON."""
+    import urllib.error
+    import urllib.request
+    try:
+        body = urllib.request.urlopen(srv.url("/metrics"),
+                                      timeout=10).read().decode()
+        samples = obs.parse_prometheus(body)
+        if not samples:
+            raise ValueError("empty /metrics exposition")
+        try:
+            resp = urllib.request.urlopen(srv.url("/health"), timeout=10)
+            code, hbody = resp.status, resp.read().decode()
+        except urllib.error.HTTPError as e:    # 503 while degraded
+            code, hbody = e.code, e.read().decode()
+        health = json.loads(hbody)
+        if health.get("status") not in ("ok", "degraded", "firing"):
+            raise ValueError(f"unexpected /health status: {health!r}")
+    except Exception as e:
+        print(f"metrics probe: FAILED ({e})")
+        raise SystemExit(1)
+    print(f"metrics probe: OK ({len(samples)} samples, "
+          f"/health {code} status={health['status']})")
 
 
 if __name__ == "__main__":

@@ -195,6 +195,7 @@ class ContinuousCompletion:
     frame: int                    # session frame it was admitted into
     ttft_s: float                 # run-start -> first token (prefill done)
     done_s: float                 # run-start -> last token
+    shed: bool = False            # dropped at run() start by a shed hint
 
 
 @dataclass
@@ -209,6 +210,9 @@ class ContinuousStats:
     prefix_evictions: int = 0     # prefix entries LRU-evicted for space
     admission_skips: int = 0      # pending requests passed over (no fit)
     shed: int = 0                 # requests truncated at intake to fit
+    shed_hint_drops: int = 0      # requests dropped by the SLO shed hint
+    cow_forks: int = 0            # paged copy-on-write block forks
+    kv_exhaustions: int = 0       # paged pool-exhaustion waits
     ttft_s: List[float] = field(default_factory=list)
     latency_s: List[float] = field(default_factory=list)
 
@@ -300,9 +304,17 @@ class ContinuousQueue:
         self._pending: List[_ContRequest] = []
         self._done: Dict[int, ContinuousCompletion] = {}
         self._next_rid = 0
+        self._shed_fraction = 0.0
         self.stats = ContinuousStats()
 
     # -------------------------------------------------------------- intake
+
+    def set_shed(self, fraction: float) -> None:
+        """SLO shed hint: drop this fraction of the pending queue (the
+        most recently submitted requests) at the next ``run()`` instead
+        of serving them late.  Set by ``ClusterRuntime`` when a node's
+        SLO monitor is FIRING; 0.0 disables."""
+        self._shed_fraction = min(max(float(fraction), 0.0), 1.0)
 
     def submit(self, prompt: Sequence[int],
                max_new_tokens: Optional[int] = None,
@@ -430,6 +442,18 @@ class ContinuousQueue:
         tr = obs_trace.get_tracer()
         paged = self.engine.paged
         base = self._stats_base()
+        if self._shed_fraction > 0.0 and self._pending:
+            # shed the tail (latest arrivals): the oldest requests have
+            # already waited longest and would be the first SLO misses
+            # if pushed back further
+            n_shed = int(len(self._pending) * self._shed_fraction)
+            for r in self._pending[len(self._pending) - n_shed:]:
+                self._done[r.rid] = ContinuousCompletion(
+                    r.rid, [], len(r.prompt), r.budget, -1, -1, 0.0, 0.0,
+                    shed=True)
+            if n_shed:
+                del self._pending[len(self._pending) - n_shed:]
+                self.stats.shed_hint_drops += n_shed
         session = ContinuousSession(
             self.engine, self.gen, key=self._key,
             prefix_cache=self.prefix_capacity if paged else None)
@@ -499,7 +523,7 @@ class ContinuousQueue:
                                 tr.emit("decode", r.trace, r.t_admit,
                                         abs_now, tokens=len(tokens),
                                         slot=slot)
-                    if paged and tr.enabled:
+                    if paged and obs_metrics.metrics_enabled():
                         obs_metrics.registry().gauge(
                             "kv_pool_fragmentation").set(
                                 session.pool_fragmentation())
@@ -528,11 +552,16 @@ class ContinuousQueue:
         self.stats.frames += session.frames
         self.stats.segments += session.segments
         self.stats.refills += session.refills
+        if paged:
+            # the allocator is fresh per run, so its lifetime totals
+            # ARE this run's deltas
+            self.stats.cow_forks += session.allocator.forks
+            self.stats.kv_exhaustions += session.allocator.exhaustions
         if session.prefix_cache is not None:
             self.stats.prefix_hits += session.prefix_cache.hits
             self.stats.prefix_misses += session.prefix_cache.misses
             self.stats.prefix_evictions += session.prefix_cache.evictions
-        if tr.enabled:
+        if obs_metrics.metrics_enabled():
             self._push_metrics(session, base)
         session.release()
         return {rid: c.tokens for rid, c in self._done.items()}
@@ -543,6 +572,7 @@ class ContinuousQueue:
         s = self.stats
         return {"tokens_out": s.tokens_out,
                 "admission_skips": s.admission_skips, "shed": s.shed,
+                "shed_hint_drops": s.shed_hint_drops,
                 "ttft_n": len(s.ttft_s), "latency_n": len(s.latency_s)}
 
     def _push_metrics(self, session: ContinuousSession,
@@ -556,6 +586,8 @@ class ContinuousQueue:
         reg.counter("queue_admission_skips").inc(
             s.admission_skips - base["admission_skips"])
         reg.counter("queue_shed").inc(s.shed - base["shed"])
+        reg.counter("queue_shed_hint_drops").inc(
+            s.shed_hint_drops - base["shed_hint_drops"])
         reg.counter("queue_tokens_out").inc(
             s.tokens_out - base["tokens_out"])
         h = reg.histogram("queue_ttft_s")

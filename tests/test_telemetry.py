@@ -1,0 +1,566 @@
+"""Telemetry layer: time-series rollups, SLO burn-rate monitors, the
+feedback loop into routing/admission, Prometheus exposition + endpoint,
+and the bench_compare regression gate.
+
+Synthetic timelines drive the store/monitor logic (every API takes an
+explicit ``t``/``now``); the scheduling-feedback tests use stub nodes
+so the routing shift is deterministic and fast, plus one tiny real
+engine for the ContinuousQueue shed hint."""
+import json
+import os
+import sys
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.cluster.runtime import ClusterRuntime
+from repro.core.cluster import Query, QueryResult
+from repro.core.inter_node import CapacityFunction
+from repro.obs import metrics as metrics_mod
+from repro.obs.export import (TelemetryServer, parse_key, parse_prometheus,
+                              render_dashboard, to_prometheus)
+from repro.obs.metrics import (MetricsRegistry, enable_metrics,
+                               escape_label, metric_key, metrics_enabled,
+                               unescape_label)
+from repro.obs.slo import FIRING, OK, Objective, SLOMonitor, node_objectives
+from repro.obs.timeseries import TimeSeriesStore
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))))
+from tools import bench_compare  # noqa: E402
+
+
+@pytest.fixture
+def reg():
+    return MetricsRegistry()
+
+
+@pytest.fixture
+def global_metrics():
+    """Global registry with pushes enabled; restored afterwards."""
+    obs.registry().reset()
+    enable_metrics(True)
+    yield obs.registry()
+    enable_metrics(False)
+    obs.registry().reset()
+
+
+# ------------------------------------------------------------- time series
+
+
+def test_counter_rate_over_window(reg):
+    store = TimeSeriesStore(reg, window_s=30.0)
+    c = reg.counter("reqs")
+    for i, t in enumerate([0.0, 10.0, 20.0, 30.0, 40.0]):
+        c.inc(10)
+        store.sample(t=t)
+    # full default window: first point inside [10, 40] is t=10 (v=20),
+    # last is t=40 (v=50) -> 30 increments over 30s
+    assert store.rate("reqs") == pytest.approx(1.0)
+    assert store.increment("reqs") == pytest.approx(30.0)
+    # narrower window sees only the last two points
+    assert store.rate("reqs", window_s=10.0, now=40.0) == pytest.approx(1.0)
+    assert store.increment("reqs", window_s=10.0, now=40.0) \
+        == pytest.approx(10.0)
+    # fewer than two points in the window -> no rate, not a crash
+    assert store.rate("reqs", window_s=1.0, now=40.0) == 0.0
+
+
+def test_ring_and_observation_wraparound(reg):
+    store = TimeSeriesStore(reg, window_s=10.0, max_points=4)
+    h = reg.histogram("lat")
+    for t in range(12):
+        h.observe(float(t))
+        store.sample(t=float(t))
+    # the snapshot ring is bounded ...
+    assert len(store) == 4
+    # ... and histogram observations older than window_s are evicted
+    xs = [v for _, v in store._obs["lat"]]
+    assert min(xs) >= 11 - 10
+    s = store.summary("lat", window_s=3.0, now=11.0)
+    assert s["count"] == 4 and s["max"] == 11.0 and s["min"] == 8.0
+
+
+def test_windowed_summary_vs_lifetime(reg):
+    store = TimeSeriesStore(reg, window_s=100.0)
+    h = reg.histogram("lat")
+    for v in (5.0, 6.0, 7.0):
+        h.observe(v)
+    store.sample(t=0.0)
+    for v in (0.1, 0.2):
+        h.observe(v)
+    store.sample(t=50.0)
+    # the registry's own summary is lifetime; the store can window out
+    # the old regime
+    assert h.summary()["max"] == 7.0
+    s = store.summary("lat", window_s=10.0, now=50.0)
+    assert s["count"] == 2 and s["max"] == pytest.approx(0.2)
+
+
+def test_gauge_ewma(reg):
+    store = TimeSeriesStore(reg, ewma_alpha=0.5)
+    g = reg.gauge("util")
+    g.set(1.0)
+    store.sample(t=0.0)
+    assert store.ewma("util") == pytest.approx(1.0)   # seeded, not decayed
+    g.set(0.0)
+    store.sample(t=1.0)
+    assert store.ewma("util") == pytest.approx(0.5)
+    store.sample(t=2.0)
+    assert store.ewma("util") == pytest.approx(0.25)
+    assert store.ewma("missing", default=7.0) == 7.0
+
+
+def test_rollup_shapes(reg):
+    store = TimeSeriesStore(reg, window_s=60.0)
+    reg.counter("c").inc(2)
+    reg.gauge("g").set(0.5)
+    reg.histogram("h").observe(1.0)
+    store.sample(t=0.0)
+    reg.counter("c").inc(2)
+    store.sample(t=10.0)
+    r = store.rollup()
+    assert r["c"]["rate"] == pytest.approx(0.2)
+    assert r["g"] == {"last": 0.5, "ewma": 0.5}
+    assert r["h"]["count"] == 1 and "rate" in r["h"]
+
+
+# ------------------------------------------------- metrics satellite fixes
+
+
+def test_histogram_extrema_survive_reservoir_eviction(monkeypatch):
+    monkeypatch.setattr(metrics_mod, "_RESERVOIR", 4)
+    h = metrics_mod.Histogram()
+    h.observe(100.0)               # evicted from the 4-slot reservoir...
+    h.observe(-3.0)
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    s = h.summary()
+    assert list(h._buf) == [1.0, 2.0, 3.0, 4.0]
+    assert s["max"] == 100.0       # ...but the running extrema remember
+    assert s["min"] == -3.0
+    assert s["count"] == 6
+
+
+def test_delta_suppresses_unchanged_gauges(reg):
+    reg.gauge("util").set(0.5)
+    reg.counter("reqs").inc(1)
+    snap = reg.snapshot()
+    reg.counter("reqs").inc(1)
+    d = reg.delta(snap)
+    assert "util" not in d                  # unchanged gauge dropped
+    assert d["reqs"] == 1
+    reg.gauge("util").set(0.75)
+    assert reg.delta(snap)["util"] == 0.75  # moved gauge re-emitted
+    assert reg.delta(None)["util"] == 0.75  # no baseline -> emitted
+
+
+def test_label_escaping_roundtrip():
+    nasty = 'a=b,c}d\\e'
+    assert unescape_label(escape_label(nasty)) == nasty
+    key = metric_key("m", tag=nasty, other="plain")
+    name, labels = parse_key(key)
+    assert name == "m"
+    assert labels == {"tag": nasty, "other": "plain"}
+    # two different label values must never collide into one key
+    assert metric_key("m", a="x,y") != metric_key("m", a="x", b="y")
+
+
+# -------------------------------------------------------------- exposition
+
+
+def test_prometheus_roundtrip(reg):
+    reg.counter("node_queries", node="0").inc(7)
+    reg.gauge("kv_pool_utilization").set(0.25)
+    h = reg.histogram("node_latency_s", node="0")
+    for v in (0.1, 0.2, 0.3):
+        h.observe(v)
+    reg.counter("weird_total", tag='a=b,c}d').inc(1)
+    text = to_prometheus(reg.snapshot(), reg)
+    assert "# TYPE node_queries counter" in text
+    assert "# TYPE kv_pool_utilization gauge" in text
+    assert "# TYPE node_latency_s summary" in text
+    back = parse_prometheus(text)
+    assert back[("node_queries", (("node", "0"),))] == 7.0
+    assert back[("kv_pool_utilization", ())] == 0.25
+    assert back[("node_latency_s_count", (("node", "0"),))] == 3.0
+    assert back[("node_latency_s_sum", (("node", "0"),))] \
+        == pytest.approx(0.6)
+    assert back[("node_latency_s",
+                 (("node", "0"), ("quantile", "0.95")))] \
+        == pytest.approx(0.29)
+    # the escaped registry label round-trips through Prometheus escaping
+    assert back[("weird_total", (("tag", 'a=b,c}d'),))] == 1.0
+    with pytest.raises(ValueError):
+        parse_prometheus("not a metric line at all!{")
+
+
+def test_telemetry_server_endpoints():
+    health = {"status": "ok"}
+    srv = TelemetryServer(metrics_fn=lambda: 'm{l="a"} 1\n',
+                          health_fn=lambda: dict(health)).start()
+    try:
+        body = urllib.request.urlopen(srv.url("/metrics")).read().decode()
+        assert parse_prometheus(body) == {("m", (("l", "a"),)): 1.0}
+        resp = urllib.request.urlopen(srv.url("/health"))
+        assert resp.status == 200
+        assert json.loads(resp.read())["status"] == "ok"
+        health["status"] = "degraded"         # degraded -> 503 + body
+        with pytest.raises(urllib.error.HTTPError) as e:
+            urllib.request.urlopen(srv.url("/health"))
+        assert e.value.code == 503
+        assert json.loads(e.value.read())["status"] == "degraded"
+        with pytest.raises(urllib.error.HTTPError) as e:
+            urllib.request.urlopen(srv.url("/nope"))
+        assert e.value.code == 404
+    finally:
+        srv.stop()
+
+
+def test_render_dashboard(reg):
+    store = TimeSeriesStore(reg, window_s=30.0)
+    assert "no samples" in render_dashboard(store, color=False)
+    reg.counter("node_queries", node="0").inc(5)
+    reg.histogram("node_latency_s", node="0").observe(0.2)
+    store.sample(t=0.0)
+    reg.counter("node_queries", node="0").inc(5)
+    store.sample(t=10.0)
+    mon = SLOMonitor(store, node_objectives(0, slo_s=1.5))
+    out = render_dashboard(store, {0: mon}, color=False)
+    assert "node" in out and "OK" in out
+    lines = out.splitlines()
+    assert any(line.strip().startswith("0") for line in lines)
+
+
+# --------------------------------------------------------------- SLO logic
+
+
+WINDOWS = ((10.0, 2.0), (30.0, 1.0))
+
+
+def test_objective_validation():
+    with pytest.raises(ValueError):
+        Objective("x", "nope", "m")
+    with pytest.raises(ValueError):
+        Objective("x", "ratio", "m")              # ratio needs total=
+    with pytest.raises(ValueError):
+        Objective("x", "quantile", "m", budget=0.0)
+
+
+def test_slo_ratio_firing_then_recovery(reg):
+    store = TimeSeriesStore(reg, window_s=30.0)
+    obj = Objective("drops", "ratio", "bad", total="tot", budget=0.05,
+                    windows=WINDOWS, min_count=4)
+    mon = SLOMonitor(store, [obj], clear_evals=2)
+    tot, bad = reg.counter("tot"), reg.counter("bad")
+    store.sample(t=0.0)
+    assert mon.evaluate(now=0.0)["drops"].status == OK    # no data yet
+    tot.inc(10)
+    bad.inc(10)                                           # 100% bad
+    store.sample(t=1.0)
+    st = mon.evaluate(now=1.0)["drops"]
+    assert st.status == FIRING and st.transitions == 1
+    assert st.burns[10.0] == pytest.approx((10 / 10) / 0.05)
+    # traffic stops; the bad increments age out of the windows, and two
+    # consecutive clean evals flip the objective back to OK
+    store.sample(t=15.0)
+    assert mon.evaluate(now=15.0)["drops"].status == FIRING   # streak 1
+    store.sample(t=20.0)
+    st = mon.evaluate(now=20.0)["drops"]
+    assert st.status == OK and st.transitions == 1
+    health = mon.health()
+    assert health["status"] == "ok" and health["firing"] == []
+
+
+def test_slo_quantile_needs_both_windows(reg):
+    """The short window alone firing must NOT page (multi-window rule)."""
+    store = TimeSeriesStore(reg, window_s=30.0)
+    obj = Objective("lat", "quantile", "lat_s", threshold=1.0,
+                    budget=0.25, windows=WINDOWS, min_count=4)
+    mon = SLOMonitor(store, [obj])
+    h = reg.histogram("lat_s")
+    # long window: 12 good observations spread over 25s
+    for t in range(12):
+        h.observe(0.1)
+        store.sample(t=float(t) * 2.3)
+    # short burst of 6 bad ones at the end
+    for _ in range(6):
+        h.observe(2.0)
+    store.sample(t=26.0)
+    st = mon.evaluate(now=26.0)["lat"]
+    # short window (>= t=16): 6 bad / 11 obs -> burn ~2.2; long window:
+    # 6/18 -> burn ~1.3; thresholds (2.0, 1.0) -> both over -> FIRING
+    assert st.burns[10.0] >= 2.0
+    assert st.status == FIRING
+    # the short window burning ALONE must not page (multi-window AND):
+    # same data, but the long window demands burn >= 4
+    mon2 = SLOMonitor(store, [Objective(
+        "lat", "quantile", "lat_s", threshold=1.0, budget=0.25,
+        windows=((10.0, 2.0), (30.0, 4.0)), min_count=4)])
+    st2 = mon2.evaluate(now=26.0)["lat"]
+    assert st2.burns[10.0] >= 2.0 and st2.status == OK
+    # and a monitor over only-good traffic never leaves OK
+    mon3 = SLOMonitor(store, [Objective(
+        "lat", "quantile", "lat_s", threshold=5.0, budget=0.25,
+        windows=WINDOWS)])
+    assert mon3.evaluate(now=26.0)["lat"].status == OK
+
+
+def test_slo_stale_observations_age_out(reg):
+    """A node that stops receiving traffic (because routing now avoids
+    it) must still recover: windows anchor at evaluation time."""
+    store = TimeSeriesStore(reg, window_s=30.0)
+    obj = Objective("lat", "quantile", "lat_s", threshold=1.0,
+                    budget=0.05, windows=WINDOWS)
+    mon = SLOMonitor(store, [obj], clear_evals=2)
+    h = reg.histogram("lat_s")
+    for _ in range(6):
+        h.observe(9.0)
+    store.sample(t=0.0)
+    assert mon.evaluate(now=0.0)["lat"].status == FIRING
+    # zero new observations — only the clock advances
+    assert mon.evaluate(now=20.0)["lat"].status == FIRING
+    st = mon.evaluate(now=25.0)["lat"]
+    assert st.status == OK
+
+
+# ------------------------------------------------- feedback into scheduling
+
+
+class _StubIdentifier:
+    updates_done = 0
+
+    def __init__(self, n_nodes):
+        self.n = n_nodes
+
+    def identify(self, embs):
+        return np.full((len(embs), self.n), 1.0 / self.n)
+
+    def feedback(self, embs, assign, scores):
+        pass
+
+    def maybe_update(self):
+        pass
+
+
+class _StubNode:
+    """SchedulableNode that pushes real per-node metrics; ``bad=True``
+    nodes drop everything they are given."""
+
+    def __init__(self, node_id, qps, bad=False):
+        self.node_id = node_id
+        self.capacity = CapacityFunction(k=qps, b=0.0, levels=[])
+        self.bad = bad
+        self.shed_fraction = 0.0
+        self.assigned = []
+
+    def profile(self, *a):
+        return self.capacity
+
+    def process_slot(self, queries, slo_s, scheduler=None):
+        self.assigned.append(len(queries))
+        reg = obs.registry()
+        nid = str(self.node_id)
+        reg.counter("node_queries", node=nid).inc(len(queries))
+        reg.counter("node_drops", node=nid).inc(
+            len(queries) if self.bad else 0)
+        h = reg.histogram("node_latency_s", node=nid)
+        lat = 10.0 * slo_s if self.bad else 0.01
+        out = []
+        for q in queries:
+            h.observe(lat)
+            out.append(QueryResult(q.qid, self.node_id, "stub",
+                                   0.0 if self.bad else 0.5, self.bad,
+                                   latency_s=lat, answer=""))
+        return out
+
+
+def _stub_slots(runtime, n_slots=6, per_slot=24, slo_s=1.5):
+    emb = np.zeros(4)
+    for s in range(n_slots):
+        queries = [Query(0, emb, qid=s * per_slot + i)
+                   for i in range(per_slot)]
+        runtime.run_slot(queries, slo_s)
+
+
+def test_routing_shifts_away_from_firing_node(global_metrics):
+    bad, good = _StubNode(0, qps=8.0, bad=True), _StubNode(1, qps=8.0)
+    runtime = ClusterRuntime([bad, good], _StubIdentifier(2), seed=0,
+                             slo_feedback=True, slo_penalty=0.25)
+    _stub_slots(runtime)
+    mon = runtime.monitors[0]
+    assert mon.firing()                         # the bad node is FIRING
+    assert runtime.monitors[1].ok()
+    h = runtime.health()
+    assert h["status"] == "degraded" and h["firing_nodes"] == ["0"]
+    assert runtime.history[-1].slo_firing == 1
+    # the shed hint reached the node object
+    assert bad.shed_fraction == 0.25 and good.shed_fraction == 0.0
+    # ... and the penalized capacity shifted routing share measurably
+    obs.registry().reset()
+    bad2, good2 = _StubNode(0, qps=8.0, bad=True), _StubNode(1, qps=8.0)
+    ablation = ClusterRuntime([bad2, good2], _StubIdentifier(2), seed=0,
+                              slo_feedback=False)
+    _stub_slots(ablation)
+    assert ablation.monitors[0].firing()        # monitors still observe
+    assert bad2.shed_fraction == 0.0            # ... but don't steer
+    late = slice(3, None)                       # after the monitor fired
+    share = sum(bad.assigned[late]) / sum(
+        bad.assigned[late] + good.assigned[late])
+    share_ab = sum(bad2.assigned[late]) / sum(
+        bad2.assigned[late] + good2.assigned[late])
+    assert share_ab >= 0.4                      # ablation keeps feeding it
+    assert share < share_ab - 0.15              # feedback shifts the load
+    # the firing gauge is exposed for /metrics
+    snap = obs.registry().snapshot()
+    assert snap[metric_key("node_slo_firing", node="0")] == 1.0
+
+
+def test_no_telemetry_without_metrics_enabled():
+    obs.registry().reset()
+    assert not metrics_enabled()
+    nodes = [_StubNode(0, qps=8.0), _StubNode(1, qps=8.0)]
+    runtime = ClusterRuntime(nodes, _StubIdentifier(2), seed=0)
+    _stub_slots(runtime, n_slots=2)
+    assert runtime.monitors == {} and runtime.store is None
+    assert runtime.health()["status"] == "ok"
+    obs.registry().reset()
+
+
+# -------------------------------------------------- shed hint (real queue)
+
+
+def test_continuous_queue_shed_hint(global_metrics):
+    from repro.configs import get_smoke_config
+    from repro.models import Model
+    from repro.serving import (ContinuousQueue, GenerationParams,
+                               ServeEngine)
+    import jax
+    cfg = get_smoke_config("llama3-8b")
+    params = Model(cfg).init_params(jax.random.PRNGKey(0), max_seq=64)
+    eng = ServeEngine(cfg, params, max_len=64, batch_size=2,
+                      prefill_chunk=8)
+    queue = ContinuousQueue(eng, GenerationParams(max_new_tokens=4))
+    rids = [queue.submit([3, 4, 5]) for _ in range(4)]
+    queue.set_shed(0.5)
+    out = queue.run()
+    assert queue.stats.shed_hint_drops == 2
+    # the tail (latest arrivals) was shed; the head was served
+    for rid in rids[:2]:
+        c = queue.result(rid)
+        assert not c.shed and len(c.tokens) == 4
+    for rid in rids[2:]:
+        c = queue.result(rid)
+        assert c.shed and c.tokens == [] and c.slot == -1
+    assert set(out) == set(rids)
+    snap = obs.registry().snapshot()
+    assert snap["queue_shed_hint_drops"] == 2
+    # shed completions never entered ttft/latency stats
+    assert len(queue.stats.ttft_s) == 2
+
+
+# --------------------------------------------------------- bench_compare
+
+
+def _bench_payload(name, rows, header, config):
+    return {"name": name, "config": config,
+            "fingerprint": "ignored-by-gate",
+            "header": header, "rows": rows}
+
+
+def _write_pair(tmp_path, base_rows, cur_rows, *, base_cfg=None,
+                cur_cfg=None, name="serve_continuous",
+                header=("mode", "p50_latency_ms", "p95_latency_ms",
+                        "ttft_mean_ms")):
+    bdir = tmp_path / "bench"
+    bldir = tmp_path / "baselines"
+    bdir.mkdir(exist_ok=True)
+    bldir.mkdir(exist_ok=True)
+    base_cfg = base_cfg or {"batch": 4, "jax": "0.4.37", "device": "cpu"}
+    cur_cfg = cur_cfg or {"batch": 4, "jax": "0.9.99", "device": "gpu"}
+    (bldir / f"BENCH_{name}.json").write_text(json.dumps(
+        _bench_payload(name, base_rows, list(header), base_cfg)))
+    (bdir / f"BENCH_{name}.json").write_text(json.dumps(
+        _bench_payload(name, cur_rows, list(header), cur_cfg)))
+    return ["--bench-dir", str(bdir), "--baseline-dir", str(bldir)]
+
+
+BASE_ROW = [["continuous", 500.0, 1000.0, 400.0]]
+
+
+def test_bench_compare_pass_and_env_keys_ignored(tmp_path, capsys):
+    # jax/device differ between baseline and current: still compared
+    argv = _write_pair(tmp_path, BASE_ROW,
+                       [["continuous", 480.0, 1050.0, 390.0]])
+    assert bench_compare.main(argv) == 0
+    out = capsys.readouterr().out
+    assert "ok" in out and "REGRESSION" not in out and "SKIP" not in out
+
+
+def test_bench_compare_fails_on_injected_regression(tmp_path, capsys):
+    # p95 latency +80% >> the 40% tolerance band -> gate fails
+    argv = _write_pair(tmp_path, BASE_ROW,
+                       [["continuous", 500.0, 1800.0, 400.0]])
+    assert bench_compare.main(argv) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_bench_compare_within_tolerance_passes(tmp_path):
+    # +30% is inside the 40% band; direction-helping moves never fail
+    argv = _write_pair(tmp_path, BASE_ROW,
+                       [["continuous", 500.0, 1300.0, 100.0]])
+    assert bench_compare.main(argv) == 0
+
+
+def test_bench_compare_fingerprint_mismatch_skips(tmp_path, capsys):
+    argv = _write_pair(tmp_path, BASE_ROW,
+                       [["continuous", 500.0, 9999.0, 400.0]],
+                       cur_cfg={"batch": 8, "jax": "0.4.37",
+                                "device": "cpu"})
+    assert bench_compare.main(argv) == 0      # skipped, not regressed
+    assert "fingerprint mismatch" in capsys.readouterr().out
+
+
+def test_bench_compare_missing_rows_regress(tmp_path):
+    # a gated row vanishing from the current run is a regression too
+    argv = _write_pair(tmp_path, BASE_ROW, [["wave", 1.0, 1.0, 1.0]])
+    assert bench_compare.main(argv) == 1
+
+
+def test_bench_compare_update_baselines(tmp_path):
+    argv = _write_pair(tmp_path, BASE_ROW,
+                       [["continuous", 500.0, 9999.0, 400.0]])
+    assert bench_compare.main(argv + ["--update-baselines"]) == 0
+    # the regression was blessed into the baseline; gate is green now
+    assert bench_compare.main(argv) == 0
+    blessed = json.loads(
+        (tmp_path / "baselines" / "BENCH_serve_continuous.json")
+        .read_text())
+    assert blessed["rows"][0][2] == 9999.0
+
+
+def test_bench_compare_no_baseline_skips(tmp_path, capsys):
+    bdir = tmp_path / "bench"
+    bdir.mkdir()
+    (bdir / "BENCH_serve_continuous.json").write_text(json.dumps(
+        _bench_payload("serve_continuous", BASE_ROW,
+                       ["mode", "p50_latency_ms", "p95_latency_ms",
+                        "ttft_mean_ms"], {"batch": 4})))
+    assert bench_compare.main(
+        ["--bench-dir", str(bdir),
+         "--baseline-dir", str(tmp_path / "nope")]) == 0
+    assert "no baseline" in capsys.readouterr().out
+
+
+def test_bench_compare_real_baselines_self_compare():
+    """The committed baselines must gate green against themselves (the
+    CI wiring sanity check)."""
+    bl = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "experiments", "bench", "baselines")
+    if not os.path.isdir(bl):
+        pytest.skip("no committed baselines")
+    assert bench_compare.main(
+        ["--bench-dir", bl, "--baseline-dir", bl]) == 0

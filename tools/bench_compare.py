@@ -1,0 +1,241 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over ``experiments/bench/BENCH_*.json``.
+
+Diffs the current bench outputs against committed baselines
+(``experiments/bench/baselines/``) and exits non-zero when a gated
+metric regresses beyond its tolerance band.  Stdlib only — CI runs it
+right after the docs-check step regenerates the bench files.
+
+    python tools/bench_compare.py                      # gate everything
+    python tools/bench_compare.py serve_throughput     # one benchmark
+    python tools/bench_compare.py --update-baselines   # bless current
+
+Rules are per-benchmark, per-row-prefix, per-column, each with a
+direction (which way is better) and a tolerance band sized for noisy
+shared CPU runners: a metric only REGRESSES when it moves the wrong
+way by more than ``max(rel_tol * |baseline|, abs_tol)``.  Runs are
+only compared like-for-like: the gate recomputes each file's config
+fingerprint *excluding* environment keys (jax version, device) and
+skips the benchmark when the comparable fingerprints differ — a
+changed benchmark config needs ``--update-baselines``, not a diff
+against stale numbers.  See docs/BENCHMARKS.md ("Regression gate").
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import shutil
+import sys
+from typing import Dict, List, Optional, Tuple
+
+BENCH_DIR = os.path.join("experiments", "bench")
+BASELINE_DIR = os.path.join(BENCH_DIR, "baselines")
+
+# config keys that describe the environment, not the benchmark — they
+# legitimately differ across machines and must not break pairing
+IGNORED_CONFIG_KEYS = ("jax", "device")
+
+
+class Rule:
+    """Gate one column of the rows matching a leading-values prefix."""
+
+    def __init__(self, row_prefix: Tuple, column: str, direction: str, *,
+                 rel_tol: float = 0.0, abs_tol: float = 0.0):
+        assert direction in ("higher", "lower")
+        self.row_prefix = tuple(row_prefix)
+        self.column = column
+        self.direction = direction      # which way is BETTER
+        self.rel_tol = rel_tol
+        self.abs_tol = abs_tol
+
+    def tolerance(self, base: float) -> float:
+        return max(self.rel_tol * abs(base), self.abs_tol)
+
+
+RULES: Dict[str, List[Rule]] = {
+    "serve_throughput": [
+        Rule(("compiled_loop",), "tokens_per_sec", "higher", rel_tol=0.40),
+        Rule(("speedup",), "tokens_per_sec", "higher", rel_tol=0.40),
+        # decode-step cost ratio across max_len (flatness bar) and the
+        # tracing overhead fraction both live in the tokens_per_sec
+        # column of their summary rows
+        Rule(("step_cost_ratio",), "tokens_per_sec", "lower",
+             rel_tol=0.40, abs_tol=0.25),
+        Rule(("obs_overhead",), "tokens_per_sec", "lower", abs_tol=0.03),
+    ],
+    "serve_continuous": [
+        Rule(("continuous",), "p95_latency_ms", "lower", rel_tol=0.40),
+        Rule(("continuous",), "ttft_mean_ms", "lower", rel_tol=0.40),
+    ],
+    "paged_prefix": [
+        Rule(("paged_flat_in_max_len",), "ratio", "lower",
+             rel_tol=0.30, abs_tol=0.15),
+        Rule(("ttft_prefix_on",), "ratio", "higher", rel_tol=0.30),
+        Rule(("prefix_hit_rate",), "ratio", "higher", abs_tol=0.10),
+    ],
+    "retrieval_scale": [
+        Rule(("ivf",), "recall_at_k", "higher", abs_tol=0.15),
+        Rule(("ivf",), "speedup_vs_flat", "higher", rel_tol=0.50),
+        Rule(("federated",), "recall_at_k", "higher", abs_tol=0.15),
+    ],
+    "cluster_e2e": [
+        Rule(("scheduled",), "quality", "higher", abs_tol=0.05),
+        Rule(("scheduled",), "drop_rate", "lower", abs_tol=0.10),
+        Rule(("scheduled",), "p95_s", "lower", rel_tol=0.75,
+             abs_tol=0.05),
+    ],
+}
+
+
+def load(path: str) -> Dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def comparable_fingerprint(config: Dict) -> str:
+    """Fingerprint of the benchmark config minus environment keys —
+    the pairing key between a baseline and a current run."""
+    cfg = {k: v for k, v in config.items()
+           if k not in IGNORED_CONFIG_KEYS}
+    blob = json.dumps(cfg, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:12]
+
+
+def _match_rows(rows: List[List], header: List[str],
+                rule: Rule) -> List[Tuple[Tuple, float]]:
+    """(identity, value) for every row whose leading values equal the
+    rule's prefix; identity is the row minus the gated column."""
+    try:
+        col = header.index(rule.column)
+    except ValueError:
+        return []
+    out = []
+    k = len(rule.row_prefix)
+    for row in rows:
+        if tuple(row[:k]) == rule.row_prefix:
+            ident = tuple(v for i, v in enumerate(row) if i != col
+                          and isinstance(v, (str, int)))
+            out.append((ident, float(row[col])))
+    return out
+
+
+def compare(name: str, base: Dict, cur: Dict) -> List[Dict]:
+    """Apply this benchmark's rules; one finding per gated metric.
+    Rows are paired positionally within a rule's matches (row order is
+    deterministic for a fixed config, and fingerprints already match).
+    """
+    findings = []
+    for rule in RULES.get(name, []):
+        b_rows = _match_rows(base["rows"], base["header"], rule)
+        c_rows = _match_rows(cur["rows"], cur["header"], rule)
+        for (b_id, b_val), (_, c_val) in zip(b_rows, c_rows):
+            sign = 1.0 if rule.direction == "lower" else -1.0
+            worse_by = sign * (c_val - b_val)    # > 0 means worse
+            tol = rule.tolerance(b_val)
+            if worse_by > tol:
+                status = "REGRESSION"
+            elif worse_by < -tol:
+                status = "improved"
+            else:
+                status = "ok"
+            findings.append({
+                "bench": name, "row": b_id, "column": rule.column,
+                "direction": rule.direction, "base": b_val,
+                "current": c_val, "worse_by": worse_by,
+                "tolerance": tol, "status": status,
+            })
+        if len(b_rows) != len(c_rows):
+            findings.append({
+                "bench": name, "row": rule.row_prefix,
+                "column": rule.column, "direction": rule.direction,
+                "base": float(len(b_rows)), "current": float(len(c_rows)),
+                "worse_by": 0.0, "tolerance": 0.0,
+                "status": "REGRESSION" if len(c_rows) < len(b_rows)
+                else "ok",
+            })
+    return findings
+
+
+def _bench_names(*dirs: str) -> List[str]:
+    names = set()
+    for d in dirs:
+        if os.path.isdir(d):
+            for fn in os.listdir(d):
+                if fn.startswith("BENCH_") and fn.endswith(".json"):
+                    names.add(fn[len("BENCH_"):-len(".json")])
+    return sorted(names)
+
+
+def _fmt(f: Dict) -> str:
+    ident = ",".join(str(v) for v in f["row"]) or f["bench"]
+    arrow = "<=" if f["direction"] == "lower" else ">="
+    return (f"[{f['bench']}] {ident} {f['column']}: "
+            f"base={f['base']:.4g} cur={f['current']:.4g} "
+            f"(want {arrow} base, tol {f['tolerance']:.3g}) "
+            f"-> {f['status']}")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff BENCH_*.json against committed baselines")
+    ap.add_argument("names", nargs="*",
+                    help="benchmark names to gate (default: all found)")
+    ap.add_argument("--bench-dir", default=BENCH_DIR)
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR)
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="copy current bench files over the baselines "
+                         "instead of comparing")
+    args = ap.parse_args(argv)
+
+    names = args.names or _bench_names(args.bench_dir, args.baseline_dir)
+    if not names:
+        print("bench_compare: no BENCH_*.json found anywhere; nothing "
+              "to gate")
+        return 0
+
+    if args.update_baselines:
+        os.makedirs(args.baseline_dir, exist_ok=True)
+        for name in names:
+            src = os.path.join(args.bench_dir, f"BENCH_{name}.json")
+            if os.path.exists(src):
+                shutil.copy(src, os.path.join(args.baseline_dir,
+                                              f"BENCH_{name}.json"))
+                print(f"bench_compare: blessed {name}")
+        return 0
+
+    regressions = 0
+    compared = 0
+    for name in names:
+        b_path = os.path.join(args.baseline_dir, f"BENCH_{name}.json")
+        c_path = os.path.join(args.bench_dir, f"BENCH_{name}.json")
+        if not os.path.exists(c_path):
+            print(f"[{name}] SKIP: no current run ({c_path} missing)")
+            continue
+        if not os.path.exists(b_path):
+            print(f"[{name}] SKIP: no baseline (bless one with "
+                  f"--update-baselines)")
+            continue
+        base, cur = load(b_path), load(c_path)
+        b_fp = comparable_fingerprint(base.get("config", {}))
+        c_fp = comparable_fingerprint(cur.get("config", {}))
+        if b_fp != c_fp:
+            print(f"[{name}] SKIP: config fingerprint mismatch "
+                  f"(baseline {b_fp} vs current {c_fp}); re-bless with "
+                  f"--update-baselines if the change is intended")
+            continue
+        if name not in RULES:
+            print(f"[{name}] SKIP: no gate rules defined")
+            continue
+        compared += 1
+        for f in compare(name, base, cur):
+            print(_fmt(f))
+            regressions += f["status"] == "REGRESSION"
+    print(f"bench_compare: {compared} benchmark(s) gated, "
+          f"{regressions} regression(s)")
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
