@@ -54,8 +54,8 @@ def _bn(layer, h, train: bool, momentum: float = 0.9):
     else:
         mu, var = layer["bn_mu"], layer["bn_var"] + 1e-5
         new_mu, new_var = layer["bn_mu"], layer["bn_var"]
-    hn = (h - mu) / jnp.sqrt(var)
-    return hn * layer["bn_g"] + layer["bn_b"], new_mu, new_var
+    hn = (h - mu[None]) / jnp.sqrt(var)[None]
+    return hn * layer["bn_g"][None] + layer["bn_b"][None], new_mu, new_var
 
 
 def policy_logits(params, e: jax.Array, train: bool = False
@@ -64,7 +64,7 @@ def policy_logits(params, e: jax.Array, train: bool = False
     h = e
     new_layers = []
     for i, layer in enumerate(params["layers"]):
-        z = h @ layer["w"] + layer["b"]
+        z = h @ layer["w"] + layer["b"][None]
         if "bn_g" in layer:
             z, mu, var = _bn(layer, z, train)
             z = jax.nn.relu(z) + h @ layer["res"]     # residual skip

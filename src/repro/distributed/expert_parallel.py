@@ -77,7 +77,7 @@ def apply_moe_expert_parallel(
             rows = ye_g[jnp.minimum(slot_g, E_loc * C - 1)]
             y_sorted = jnp.where(valid[:, None], rows, 0)
             return jnp.zeros((S, D), x_l.dtype).at[tok_g].add(
-                y_sorted * gate_g[:, None])
+                y_sorted * gate_g[:, None], mode="drop")
 
         y = jax.vmap(combine)(ye, slot, keep, tok, gate)
         y = jax.lax.psum(y, axis)                # ONE compact psum

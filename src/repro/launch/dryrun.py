@@ -36,14 +36,14 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool, outdir: str,
         rec["reason"] = "long_500k needs sub-quadratic attention (DESIGN.md)"
         return _emit(rec, outdir, save)
     try:
-        t0 = time.time()
+        t0 = time.perf_counter()
         step, args, in_sh, out_sh, meta = build_step(cfg, shape, mesh)
         with mesh:
             lowered = jax.jit(step, in_shardings=in_sh,
                               out_shardings=out_sh).lower(*args)
-            t_lower = time.time() - t0
+            t_lower = time.perf_counter() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = time.perf_counter() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
         stats = roofline.analyze(compiled.as_text())

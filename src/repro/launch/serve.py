@@ -53,9 +53,9 @@ def main():
 
     queue = RequestQueue(eng, gen)
     rids = queue.submit_all(prompts)
-    t0 = time.time()
+    t0 = time.perf_counter()
     outs = queue.run()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     toks = sum(len(outs[r]) for r in rids)
     st = queue.stats
     print(f"generated {toks} tokens for {st.requests} requests in {dt:.2f}s "
@@ -68,12 +68,12 @@ def main():
         wave = prompts[:args.batch]
         eng.generate(wave, gen=gen)             # warm both paths
         eng.generate_reference(wave, gen=gen)
-        t0 = time.time()
+        t0 = time.perf_counter()
         eng.generate(wave, gen=gen)
-        t_new = time.time() - t0
-        t0 = time.time()
+        t_new = time.perf_counter() - t0
+        t0 = time.perf_counter()
         eng.generate_reference(wave, gen=gen)
-        t_ref = time.time() - t0
+        t_ref = time.perf_counter() - t0
         n = len(wave) * args.new_tokens
         print(f"compiled loop {n/t_new:.1f} tok/s vs python loop "
               f"{n/t_ref:.1f} tok/s -> {t_ref/t_new:.1f}x")

@@ -48,7 +48,7 @@ def main():
                                       microbatch=args.microbatch))
     B, S = args.batch, args.seq
     with mesh:
-        t0 = time.time()
+        t0 = time.perf_counter()
         for step in range(args.steps):
             k = jax.random.fold_in(key, step)
             toks = jax.random.randint(k, (B, S + 1), 0, cfg.vocab_size)
@@ -58,7 +58,7 @@ def main():
             params, opt, m = step_fn(params, opt, batch)
             if step % 5 == 0 or step == args.steps - 1:
                 print(f"step {step:4d}  loss {float(m['loss']):.4f}  "
-                      f"({time.time()-t0:.1f}s)", flush=True)
+                      f"({time.perf_counter()-t0:.1f}s)", flush=True)
     if args.ckpt:
         save(args.ckpt, params)
         print("saved", args.ckpt)

@@ -31,15 +31,24 @@ from repro.configs.base import ModelConfig
 from repro.models import ssm
 
 
+def _match_rank(i: jax.Array, length) -> jax.Array:
+    """Lift the [S] arange to length's rank so the comparison broadcasts
+    explicitly (length is a scalar, or [B,1] for per-row starts)."""
+    nd = jnp.ndim(length)
+    return i.reshape((1,) * (nd - 1) + (-1,)) if nd else i
+
+
 def full_kv_positions(length: jax.Array, s_max: int) -> jax.Array:
-    """[S] absolute positions; -1 for unwritten slots."""
-    i = jnp.arange(s_max, dtype=jnp.int32)
+    """[S] absolute positions; -1 for unwritten slots.  A batched
+    ``length`` ([B,1]) yields per-row positions [B,S]."""
+    i = _match_rank(jnp.arange(s_max, dtype=jnp.int32), length)
     return jnp.where(i < length, i, -1)
 
 
 def rolling_kv_positions(length: jax.Array, window: int) -> jax.Array:
-    """[W] absolute position held by each rolling slot; negative = empty."""
-    j = jnp.arange(window, dtype=jnp.int32)
+    """[W] absolute position held by each rolling slot; negative = empty.
+    A batched ``length`` ([B,1]) yields per-row positions [B,W]."""
+    j = _match_rank(jnp.arange(window, dtype=jnp.int32), length)
     # largest p < length with p % W == j  (floor-div is floor for negatives)
     return j + window * jnp.floor_divide(length - 1 - j, window)
 
@@ -172,7 +181,9 @@ def write_seq(kv_cache: dict, k: jax.Array, v: jax.Array,
 
     def put(buf, seg):
         sl = jax.lax.dynamic_index_in_dim(buf, cycle, 0, keepdims=False)
-        sl = sl.at[:, idx].set(seg.astype(buf.dtype))
+        # idx is (start + arange) % L: always in [0, L), but scatter with
+        # an explicit drop so the write invariant holds on every backend
+        sl = sl.at[:, idx].set(seg.astype(buf.dtype), mode="drop")
         return jax.lax.dynamic_update_slice_in_dim(buf, sl[None], cycle, 0)
 
     return {"k": put(kv_cache["k"], k), "v": put(kv_cache["v"], v)}

@@ -45,15 +45,17 @@ def init_norm(cfg: ModelConfig, dtype):
 def apply_norm(params, x: jax.Array, cfg: ModelConfig, eps: float = 1e-6) -> jax.Array:
     dt = x.dtype
     x32 = x.astype(jnp.float32)
+    lift = (1,) * (x.ndim - 1) + (-1,)  # [D] params against [..., D] x
     if cfg.norm_type == "rmsnorm":
         x32 = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
-        return x32.astype(dt) * params["scale"]
+        return x32.astype(dt) * params["scale"].reshape(lift)
     # layernorm / nonparametric layernorm
     mu = jnp.mean(x32, -1, keepdims=True)
     var = jnp.mean(jnp.square(x32 - mu), -1, keepdims=True)
     x32 = (x32 - mu) * jax.lax.rsqrt(var + eps)
     if cfg.norm_type == "layernorm":
-        x32 = x32 * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+        x32 = x32 * params["scale"].astype(jnp.float32).reshape(lift) \
+            + params["bias"].astype(jnp.float32).reshape(lift)
     return x32.astype(dt)
 
 
@@ -74,11 +76,13 @@ def rope_angles(positions: jax.Array, head_dim: int, theta: float,
     """
     inv = rope_frequencies(head_dim, theta)  # [hd/2]
     if positions.ndim == 2:
-        return positions[..., None].astype(jnp.float32) * inv  # [B,S,hd/2]
+        return positions[..., None].astype(jnp.float32) \
+            * inv[None, None]  # [B,S,hd/2]
     # M-RoPE: positions [3,B,S]; section s of the hd/2 freq dims takes its
     # angle from axis s's position index.
     assert sum(mrope_sections) == head_dim // 2, (mrope_sections, head_dim)
-    ang = positions[..., None].astype(jnp.float32) * inv  # [3,B,S,hd/2]
+    ang = positions[..., None].astype(jnp.float32) \
+        * inv[None, None, None]  # [3,B,S,hd/2]
     parts = []
     start = 0
     for i, sec in enumerate(mrope_sections):
@@ -316,7 +320,8 @@ def init_attention(key, cfg: ModelConfig, dtype):
 def _headwise_rms(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
     x32 = x.astype(jnp.float32)
     x32 = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
-    return (x32 * scale.astype(jnp.float32)).astype(x.dtype)
+    lift = scale.astype(jnp.float32).reshape((1,) * (x.ndim - 1) + (-1,))
+    return (x32 * lift).astype(x.dtype)
 
 
 def qkv_project(params, x: jax.Array, cfg: ModelConfig,

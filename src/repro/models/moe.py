@@ -73,9 +73,12 @@ def _dispatch_group(xg: jax.Array, top_idx: jax.Array, gates: jax.Array,
     group_start = jnp.searchsorted(se, se, side="left")
     pos_in_e = jnp.arange(Sk) - group_start
     keep = pos_in_e < C
-    slot = jnp.where(keep, se * C + pos_in_e, E * C)   # E*C = trash row
-    xe = jnp.zeros((E * C + 1, xg.shape[-1]), xg.dtype).at[slot].set(xg[st_tok])
-    return xe[:-1], slot, keep, st_tok, st_gate
+    slot = jnp.where(keep, se * C + pos_in_e, E * C)   # E*C = OOB sentinel
+    # over-capacity tokens scatter to the out-of-bounds sentinel row and
+    # are dropped — no trash row to allocate and slice off (IL004)
+    xe = jnp.zeros((E * C, xg.shape[-1]), xg.dtype).at[slot].set(
+        xg[st_tok], mode="drop")
+    return xe, slot, keep, st_tok, st_gate
 
 
 def apply_moe(params, x: jax.Array, cfg: ModelConfig,
@@ -119,7 +122,7 @@ def apply_moe(params, x: jax.Array, cfg: ModelConfig,
         y_sorted = jnp.where(keep_g[:, None],
                              ye_g[jnp.minimum(slot_g, E * C - 1)], 0)
         return jnp.zeros((S, D), x.dtype).at[tok_g].add(
-            y_sorted * gate_g[:, None])
+            y_sorted * gate_g[:, None], mode="drop")
 
     y = jax.vmap(combine)(ye, slot, keep, st_tok, st_gate)
     y = maybe_constrain(y, batch_ax, None, None)

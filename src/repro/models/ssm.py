@@ -66,8 +66,8 @@ def _mamba_conv_full(params, xz: jax.Array) -> jax.Array:
     xpad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
     out = jnp.zeros_like(x)
     for i in range(W):                                 # small static loop
-        out = out + xpad[:, i:i + x.shape[1]] * w[i]
-    return (out + params["conv_b"].astype(jnp.float32)).astype(xz.dtype)
+        out = out + xpad[:, i:i + x.shape[1]] * w[i][None, None]
+    return (out + params["conv_b"].astype(jnp.float32)[None, None]).astype(xz.dtype)
 
 
 def _mamba_ssm_params(params, cfg: ModelConfig, xc: jax.Array):
@@ -76,7 +76,8 @@ def _mamba_ssm_params(params, cfg: ModelConfig, xc: jax.Array):
     proj = xc @ params["x_proj"]
     dt_rank = proj.shape[-1] - 2 * state
     dt, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + state], axis=-1)
-    dt = jax.nn.softplus(dt @ params["dt_proj"] + params["dt_bias"])
+    bias = params["dt_bias"].reshape((1,) * (dt.ndim - 1) + (-1,))
+    dt = jax.nn.softplus(dt @ params["dt_proj"] + bias)
     return dt.astype(jnp.float32), Bm.astype(jnp.float32), Cm.astype(jnp.float32)
 
 
@@ -128,11 +129,11 @@ def mamba_forward(params, x: jax.Array, cfg: ModelConfig,
 
     def step(h, t_xs):
         dt_t, B_t, C_t, x_t, m_t = t_xs               # m_t: [B]
-        dA = jnp.exp(dt_t[..., None] * A)             # [B,inner,state]
+        dA = jnp.exp(dt_t[..., None] * A[None])       # [B,inner,state]
         dBx = dt_t[..., None] * B_t[:, None, :] * x_t[..., None]
         h_new = h * dA + dBx
         h = jnp.where(m_t[:, None, None], h_new, h)
-        y = jnp.einsum("bis,bs->bi", h, C_t) + params["D"] * x_t
+        y = jnp.einsum("bis,bs->bi", h, C_t) + params["D"][None] * x_t
         return h, y
 
     def chunk_step(h, c_xs):
@@ -170,12 +171,12 @@ def mamba_step(params, x_t: jax.Array, cfg: ModelConfig,
     w = params["conv_w"].astype(jnp.float32)
     xc = jax.nn.silu(
         (hist.astype(jnp.float32) * w[None]).sum(1)
-        + params["conv_b"].astype(jnp.float32))       # [B,inner]
+        + params["conv_b"].astype(jnp.float32)[None])  # [B,inner]
     dt, Bm, Cm = _mamba_ssm_params(params, cfg, xc.astype(x_t.dtype))
     A = -jnp.exp(params["A_log"])
-    dA = jnp.exp(dt[..., None] * A)
+    dA = jnp.exp(dt[..., None] * A[None])
     h = state["h"] * dA + dt[..., None] * Bm[:, None, :] * xc[..., None]
-    y = jnp.einsum("bis,bs->bi", h, Cm) + params["D"] * xc
+    y = jnp.einsum("bis,bs->bi", h, Cm) + params["D"][None] * xc
     y = (y[:, None].astype(x_t.dtype)) * jax.nn.silu(z)
     out = y @ params["out_proj"]
     return out, {"h": h, "conv": hist[:, 1:]}
@@ -388,7 +389,7 @@ def _slstm_cell(params, pre, state):
     """pre: [B,4d] input pre-activations (x@W); adds diagonal recurrence."""
     d = pre.shape[-1] // 4
     r = params["r"].astype(jnp.float32)
-    hrec = jnp.concatenate([state["h"]] * 4, axis=-1) * r
+    hrec = jnp.concatenate([state["h"]] * 4, axis=-1) * r[None]
     pre = pre.astype(jnp.float32) + hrec
     li = pre[:, :d]                                    # log-space input gate
     lf = -jax.nn.softplus(-pre[:, d:2 * d])            # log sigmoid forget

@@ -6,6 +6,7 @@ from __future__ import annotations
 
 import json
 import os
+import warnings
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -63,6 +64,19 @@ class FlightRecorder:
 # ------------------------------------------------------ device profiler
 
 _PROFILING = False
+_PROFILER_WARNED = False
+
+
+def _warn_profiler_once(op: str, exc: Exception):
+    """The profiler being unavailable (or a trace already running out of
+    band) must not kill serving, but it must not be invisible either:
+    warn the first time, stay quiet after."""
+    global _PROFILER_WARNED
+    if _PROFILER_WARNED:
+        return
+    _PROFILER_WARNED = True
+    warnings.warn(f"jax.profiler {op} failed ({type(exc).__name__}: {exc}); "
+                  "device profiles disabled for this process", RuntimeWarning)
 
 
 def start_device_profile(logdir: str) -> bool:
@@ -74,7 +88,8 @@ def start_device_profile(logdir: str) -> bool:
     try:
         import jax
         jax.profiler.start_trace(logdir)
-    except Exception:
+    except Exception as e:
+        _warn_profiler_once("start_trace", e)
         return False
     _PROFILING = True
     return True
@@ -88,6 +103,7 @@ def stop_device_profile() -> bool:
     try:
         import jax
         jax.profiler.stop_trace()
-    except Exception:
+    except Exception as e:
+        _warn_profiler_once("stop_trace", e)
         return False
     return True

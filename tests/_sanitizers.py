@@ -1,0 +1,53 @@
+"""Test-suite hooks for the runtime sanitizers (tools/sanitize.py).
+
+Keeps the sys.path plumbing in one place: tests import the guard,
+poisoner, and strict-numerics helpers from here, and conftest.py pulls
+the fixtures in so any test can declare them.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+import pytest
+
+_TOOLS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tools")
+if _TOOLS not in sys.path:
+    sys.path.insert(0, _TOOLS)
+
+from sanitize import (  # noqa: E402,F401  (re-exported for tests)
+    ENGINE_DONATIONS,
+    RecompileError,
+    RecompileGuard,
+    jitted_functions,
+    pallas_parity_report,
+    poison_donated,
+    poison_engine,
+    strict_numerics,
+)
+
+
+@pytest.fixture
+def recompile_guard():
+    """Factory fixture: ``guard = recompile_guard(eng)`` tracks every
+    jit wrapper on ``eng`` (or accepts an explicit dict) and asserts no
+    recompiles happen inside the ``with`` block."""
+
+    def make(obj, budget: int = 0) -> RecompileGuard:
+        tracked = obj if isinstance(obj, dict) else jitted_functions(obj)
+        return RecompileGuard(tracked, budget=budget)
+
+    return make
+
+
+@pytest.fixture
+def poisoned(recompile_guard):
+    """Factory fixture: ``poisoned(eng)`` turns on TPU-faithful donation
+    semantics for the engine (donated buffers die after each dispatch)."""
+
+    def make(eng):
+        poison_engine(eng)
+        return eng
+
+    return make

@@ -4,6 +4,17 @@
 import jax
 import pytest
 
+# The whole suite runs with implicit rank promotion forbidden: a [B,L]
+# op against an [L] operand must say so (broadcast explicitly or add the
+# axis).  Scalars (rank 0) are exempt per numpy semantics.  This is the
+# IL-series sanitizer discipline — see docs/STATIC_ANALYSIS.md.
+jax.config.update("jax_numpy_rank_promotion", "raise")
+
+from _sanitizers import (  # noqa: E402,F401  (fixtures: recompile_guard, poisoned)
+    poisoned,
+    recompile_guard,
+)
+
 
 def pytest_configure(config):
     config.addinivalue_line(

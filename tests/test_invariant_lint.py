@@ -1,0 +1,430 @@
+"""The analyzer's own test suite: per-rule good/bad fixture snippets
+(each rule must demonstrably fire, and must stay quiet on the idiomatic
+pattern), the suppression machinery, and a self-scan asserting the
+repo's src/ is clean."""
+import json
+import os
+import sys
+import textwrap
+
+import pytest
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_TOOLS = os.path.join(_REPO, "tools")
+if _TOOLS not in sys.path:
+    sys.path.insert(0, _TOOLS)
+
+from invariant_lint import ModuleIndex, load_sources, run_rules  # noqa: E402
+from invariant_lint.run import main as lint_main  # noqa: E402
+
+
+def lint(tmp_path, code, name="snippet.py"):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(code))
+    sources = load_sources([str(p)])
+    return run_rules(sources, ModuleIndex(sources))
+
+
+def fired(findings):
+    return {f.rule for f in findings}
+
+
+# ------------------------------------------------------------------ IL001
+
+
+def test_il001_fires_on_clock_in_jitted_fn(tmp_path):
+    out = lint(tmp_path, """
+        import time
+        import jax
+
+        def step(x):
+            t0 = time.perf_counter()
+            return x * 2
+
+        run = jax.jit(step)
+    """)
+    assert fired(out) == {"IL001"}
+    assert "trace time" in out[0].message
+
+
+def test_il001_fires_on_print_in_scan_body(tmp_path):
+    out = lint(tmp_path, """
+        import jax
+
+        def outer(xs):
+            def body(carry, x):
+                print(carry)
+                return carry + x, x
+            return jax.lax.scan(body, 0, xs)
+    """)
+    assert fired(out) == {"IL001"}
+
+
+def test_il001_fires_on_obs_call_reached_through_call_graph(tmp_path):
+    out = lint(tmp_path, """
+        import jax
+        from repro.obs import metrics as obs_metrics
+
+        def helper(x):
+            obs_metrics.registry().counter("steps")
+            return x
+
+        def step(x):
+            return helper(x) + 1
+
+        run = jax.jit(step)
+    """)
+    assert "IL001" in fired(out)
+
+
+def test_il001_fires_on_item_and_float_of_param(tmp_path):
+    out = lint(tmp_path, """
+        import jax
+
+        @jax.jit
+        def step(x, y):
+            return x.item() + float(y)
+    """)
+    assert [f.rule for f in out] == ["IL001", "IL001"]
+
+
+def test_il001_quiet_on_host_side_and_shape_ints(tmp_path):
+    out = lint(tmp_path, """
+        import time
+        import jax
+        import jax.numpy as jnp
+
+        def step(x):
+            n = int(x.shape[-1])
+            return x * jnp.float32(n)
+
+        run = jax.jit(step)
+
+        def host_loop(x):
+            t0 = time.perf_counter()
+            y = run(x)
+            print(time.perf_counter() - t0)
+            return y
+    """)
+    assert fired(out) == set()
+
+
+# ------------------------------------------------------------------ IL002
+
+
+def test_il002_fires_on_read_after_donate(tmp_path):
+    out = lint(tmp_path, """
+        import jax
+
+        class Eng:
+            def __init__(self):
+                self._step = jax.jit(self._impl, donate_argnums=(1,))
+
+            def _impl(self, p, buf):
+                return buf + 1
+
+            def run(self, p, buf):
+                out = self._step(p, buf)
+                return out + buf.sum()
+    """)
+    assert fired(out) == {"IL002"}
+    assert "donated" in out[0].message
+
+
+def test_il002_fires_on_loop_without_rebinding(tmp_path):
+    out = lint(tmp_path, """
+        import jax
+
+        class Eng:
+            def __init__(self):
+                self._step = jax.jit(self._impl, donate_argnums=(1,))
+
+            def _impl(self, p, buf):
+                return buf + 1
+
+            def loop(self, p, buf):
+                for _ in range(3):
+                    out = self._step(p, buf)
+                return out
+    """)
+    assert "IL002" in fired(out)
+
+
+def test_il002_quiet_on_rebinding_idiom(tmp_path):
+    out = lint(tmp_path, """
+        import jax
+
+        class Eng:
+            def __init__(self):
+                self._step = jax.jit(self._impl, donate_argnums=(1, 2))
+
+            def _impl(self, p, buf, k):
+                return buf + 1, k
+
+            def loop(self, p, buf, k):
+                while True:
+                    buf, k = self._step(p, buf, k)
+                return buf
+    """)
+    assert fired(out) == set()
+
+
+# ------------------------------------------------------------------ IL003
+
+
+def test_il003_fires_on_immediate_invocation_and_loop_jit(tmp_path):
+    out = lint(tmp_path, """
+        import jax
+
+        def hot(xs, f):
+            acc = 0
+            for x in xs:
+                acc += jax.jit(f)(x)
+            return acc
+
+        def once(x, f):
+            return jax.jit(f)(x)
+    """)
+    assert [f.rule for f in out] == ["IL003", "IL003"]
+
+
+def test_il003_quiet_on_setup_and_aot(tmp_path):
+    out = lint(tmp_path, """
+        import jax
+
+        class Eng:
+            def __init__(self, f):
+                self._step = jax.jit(f, static_argnames=("n",))
+
+        def sweep(cases):
+            for f, args in cases:
+                yield jax.jit(f).lower(*args)
+    """)
+    assert fired(out) == set()
+
+
+# ------------------------------------------------------------------ IL004
+
+
+def test_il004_fires_on_computed_scatter_without_drop(tmp_path):
+    out = lint(tmp_path, """
+        import jax.numpy as jnp
+
+        def scatter(buf, idx, vals):
+            return buf.at[idx].set(vals)
+    """)
+    assert fired(out) == {"IL004"}
+
+
+def test_il004_quiet_on_drop_and_static_indices(tmp_path):
+    out = lint(tmp_path, """
+        import jax.numpy as jnp
+
+        def scatter(buf, idx, vals):
+            a = buf.at[idx].set(vals, mode="drop")
+            b = a.at[:, 0::2].set(0.0)
+            return b.at[..., 0].set(1.0)
+    """)
+    assert fired(out) == set()
+
+
+def test_il004_fires_on_nondividing_blockspec(tmp_path):
+    out = lint(tmp_path, """
+        import jax
+        from jax.experimental import pallas as pl
+
+        def kern(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def call(x):
+            return pl.pallas_call(
+                kern,
+                grid=(2,),
+                in_specs=[pl.BlockSpec((48, 128), lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((48, 128), lambda i: (i, 0)),
+                out_shape=jax.ShapeDtypeStruct((100, 128), x.dtype),
+            )(x)
+    """)
+    assert "IL004" in fired(out)
+    assert any("does not divide" in f.message for f in out)
+
+
+# ------------------------------------------------------------------ IL005
+
+
+def test_il005_fires_on_unguarded_push(tmp_path):
+    out = lint(tmp_path, """
+        from repro.obs import metrics as obs_metrics
+
+        def slot_done(n):
+            obs_metrics.registry().counter("queries").inc(n)
+    """)
+    assert fired(out) == {"IL005"}
+
+
+def test_il005_quiet_on_lexical_guard_and_guarded_callsite(tmp_path):
+    out = lint(tmp_path, """
+        from repro.obs import metrics as obs_metrics
+
+        def _push(n):
+            reg = obs_metrics.registry()
+            reg.counter("queries").inc(n)
+
+        def slot_done(n):
+            if obs_metrics.metrics_enabled():
+                _push(n)
+
+        def other(n):
+            telemetry = obs_metrics.metrics_enabled()
+            x = _push(n) if telemetry else None
+            return x
+    """)
+    assert fired(out) == set()
+
+
+# ------------------------------------------------------------------ IL006
+
+
+def test_il006_fires_on_bare_and_silent_broad_except(tmp_path):
+    out = lint(tmp_path, """
+        def a():
+            try:
+                work()
+            except:
+                pass
+
+        def b():
+            try:
+                work()
+            except Exception:
+                return False
+    """)
+    assert [f.rule for f in out] == ["IL006", "IL006"]
+
+
+def test_il006_quiet_on_narrow_logged_or_recorded(tmp_path):
+    out = lint(tmp_path, """
+        import warnings
+
+        def a():
+            try:
+                work()
+            except ValueError:
+                pass
+
+        def b(rec):
+            try:
+                work()
+            except Exception as e:
+                rec["error"] = repr(e)
+
+        def c():
+            try:
+                work()
+            except Exception as e:
+                warnings.warn(f"work failed: {e}")
+                return False
+    """)
+    assert fired(out) == set()
+
+
+# ------------------------------------------------------------------ IL007
+
+
+def test_il007_fires_on_wallclock_duration(tmp_path):
+    out = lint(tmp_path, """
+        import time
+
+        def measure(f):
+            t0 = time.time()
+            f()
+            return time.time() - t0
+    """)
+    assert fired(out) == {"IL007"}
+
+
+def test_il007_quiet_on_perf_counter_and_timestamps(tmp_path):
+    out = lint(tmp_path, """
+        import time
+
+        def measure(f):
+            t0 = time.perf_counter()
+            f()
+            return time.perf_counter() - t0
+
+        def stamp(event):
+            event["t"] = time.time()
+            return event
+    """)
+    assert fired(out) == set()
+
+
+# ------------------------------------------------------- suppressions
+
+
+def test_reasoned_suppression_silences_only_that_rule(tmp_path):
+    out = lint(tmp_path, """
+        import jax.numpy as jnp
+
+        def scatter(buf, idx, vals):
+            # lint: disable=IL004 idx is a mod-L permutation, in bounds
+            return buf.at[idx].set(vals)
+    """)
+    assert fired(out) == set()
+
+
+def test_reasonless_suppression_is_ignored_and_reported(tmp_path):
+    out = lint(tmp_path, """
+        import jax.numpy as jnp
+
+        def scatter(buf, idx, vals):
+            # lint: disable=IL004
+            return buf.at[idx].set(vals)
+    """)
+    assert fired(out) == {"IL000", "IL004"}
+
+
+# ------------------------------------------------------- CLI + self-scan
+
+
+def test_cli_json_report_and_exit_codes(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("def f():\n    try:\n        g()\n    except:\n"
+                   "        pass\n")
+    report = tmp_path / "report.json"
+    rc = lint_main(["--check", str(bad), "--json", str(report)])
+    assert rc == 1
+    data = json.loads(report.read_text())
+    assert data["version"] == 1
+    assert data["counts"] == {"IL006": 1}
+    f = data["findings"][0]
+    assert f["rule"] == "IL006" and f["line"] == 4
+    out = capsys.readouterr().out
+    assert "IL006" in out and ":4:" in out
+
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n")
+    assert lint_main(["--check", str(good)]) == 0
+
+
+def test_self_scan_src_is_clean():
+    """The linted invariants hold over the real serving stack."""
+    sources = load_sources([os.path.join(_REPO, "src")])
+    assert len(sources) > 50
+    findings = run_rules(sources, ModuleIndex(sources))
+    assert findings == [], "\n" + "\n".join(f.format() for f in findings)
+
+
+def test_traced_set_covers_the_known_entry_points():
+    """The call-graph walk must reach the engine impls, the model stack,
+    and every Pallas kernel — if it stops reaching them, IL001 silently
+    checks nothing."""
+    from invariant_lint.callgraph import build_traced_set
+    sources = load_sources([os.path.join(_REPO, "src")])
+    traced = build_traced_set(sources, ModuleIndex(sources))
+    names = {getattr(n, "name", "<lambda>") for n, _ in traced.items()}
+    for expected in ("decode_step", "_run_stack", "_decode_cont_impl",
+                     "_paged_refill_impl", "flash_attention_pallas",
+                     "paged_decode_attention_pallas", "topk_pallas",
+                     "ivf_topk_pallas", "write_token", "sample_token"):
+        assert expected in names, expected

@@ -1,0 +1,21 @@
+"""Repo-specific invariant lint for the serving stack.
+
+A stdlib-``ast`` analyzer that machine-enforces the correctness rules
+documented in docs/ARCHITECTURE.md (and catalogued with rationale in
+docs/STATIC_ANALYSIS.md):
+
+  IL001  no host-side calls inside jit-traced/scanned code
+  IL002  donation discipline: donated buffers are dead after the call
+  IL003  recompile hazards: no fresh ``jax.jit`` wrappers on hot paths
+  IL004  scatter safety: computed-index scatters carry ``mode="drop"``
+  IL005  observability gating: registry pushes behind ``metrics_enabled()``
+  IL006  no bare/broad *silent* ``except``
+  IL007  durations measured with ``perf_counter``, not wall-clock
+
+Run ``python tools/invariant_lint/run.py --check`` (CI does, before the
+docs-check).  Suppress a finding in place with
+``# lint: disable=IL00x <reason>`` — the reason is mandatory.
+"""
+from .core import Finding, Source, load_sources  # noqa: F401
+from .modindex import ModuleIndex  # noqa: F401
+from .rules import ALL_RULES, run_rules  # noqa: F401

@@ -1,0 +1,191 @@
+"""Traced-code discovery: which function defs end up inside XLA traces.
+
+Entry points are functions handed to ``jax.jit`` (call or decorator
+form, including ``functools.partial(jax.jit, ...)``) and the
+function-valued arguments of the tracing combinators
+(``lax.while_loop``/``scan``/``cond``/``fori_loop``/``switch``/``map``,
+``jax.vmap``/``pmap``/``checkpoint``/``remat``, ``pl.pallas_call``).
+From those entries we walk the call graph: locally defined helpers,
+same-class ``self.`` methods, module-level functions, and
+``alias.fn(...)`` calls through project imports.  Nested defs of a
+traced function are traced too (they are the while/scan bodies).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from .core import Source, attr_path
+from .modindex import FuncInfo, ModuleIndex
+
+# combinator tail-name -> positional indices whose args get traced
+_COMBINATORS: Dict[str, Tuple[int, ...]] = {
+    "jit": (0,),
+    "while_loop": (0, 1),
+    "scan": (0,),
+    "cond": (1, 2, 3),
+    "switch": (1, 2, 3, 4, 5, 6, 7, 8),
+    "fori_loop": (2,),
+    "map": (0,),
+    "vmap": (0,),
+    "pmap": (0,),
+    "checkpoint": (0,),
+    "remat": (0,),
+    "pallas_call": (0,),
+    "custom_jvp": (0,),
+    "custom_vjp": (0,),
+    "grad": (0,),
+    "value_and_grad": (0,),
+}
+
+_JAX_ROOTS = {"jax", "lax", "pl", "pltpu", "plgpu"}
+
+
+def _tail(func: ast.AST) -> Optional[str]:
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return None
+
+
+def _is_jax_combinator(src: Source, index: ModuleIndex,
+                       call: ast.Call) -> Optional[Tuple[int, ...]]:
+    tail = _tail(call.func)
+    if tail not in _COMBINATORS:
+        return None
+    if isinstance(call.func, ast.Attribute):
+        path = attr_path(call.func)
+        # jax.tree.map / tree_util.tree_map look like lax.map but map
+        # over pytrees, not traces; require the lax spelling for "map"
+        if tail == "map" and not (path or "").endswith("lax.map"):
+            return None
+        root = path.split(".")[0] if path else None
+        if root in _JAX_ROOTS:
+            return _COMBINATORS[tail]
+        resolved = index.resolve_alias(src, root) if root else None
+        if resolved and (resolved == "jax" or resolved.startswith("jax.")):
+            return _COMBINATORS[tail]
+        return None
+    # bare name: only if imported from jax (``from jax import jit``)
+    sym = index.resolve_symbol(src, tail)
+    if sym and (sym == f"jax.{tail}" or sym.startswith("jax.")):
+        return _COMBINATORS[tail]
+    return None
+
+
+class TracedSet:
+    """The set of (node, source) pairs known to run under tracing."""
+
+    def __init__(self):
+        self.nodes: Dict[int, Tuple[ast.AST, Source]] = {}
+
+    def add(self, node: ast.AST, src: Source) -> bool:
+        key = id(node)
+        if key in self.nodes:
+            return False
+        self.nodes[key] = (node, src)
+        return True
+
+    def __contains__(self, node: ast.AST) -> bool:
+        return id(node) in self.nodes
+
+    def items(self) -> List[Tuple[ast.AST, Source]]:
+        return list(self.nodes.values())
+
+
+def _local_defs(fn: ast.AST) -> Dict[str, ast.AST]:
+    """Nested function defs of ``fn`` by name (one level is enough for
+    the while/scan body idiom)."""
+    out: Dict[str, ast.AST] = {}
+    for node in ast.walk(fn):
+        if node is fn:
+            continue
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out[node.name] = node
+    return out
+
+
+def _resolve_traceable(index: ModuleIndex, src: Source, expr: ast.AST,
+                       enclosing_fn: Optional[ast.AST],
+                       enclosing_class: Optional[str],
+                       by_method_name: bool) -> List[Tuple[ast.AST, Source]]:
+    """Resolve a function-valued expression to defs to mark traced."""
+    # peel functools.partial(f, ...) down to f
+    if isinstance(expr, ast.Call) and _tail(expr.func) == "partial" and expr.args:
+        return _resolve_traceable(index, src, expr.args[0], enclosing_fn,
+                                  enclosing_class, by_method_name)
+    if isinstance(expr, ast.Lambda):
+        return [(expr, src)]
+    if isinstance(expr, ast.Name) and enclosing_fn is not None:
+        local = _local_defs(enclosing_fn).get(expr.id)
+        if local is not None:
+            return [(local, src)]
+    infos = index.resolve_call_target(src, expr, enclosing_class,
+                                     by_method_name=by_method_name)
+    return [(fi.node, fi.source) for fi in infos]
+
+
+def build_traced_set(sources: List[Source], index: ModuleIndex) -> TracedSet:
+    traced = TracedSet()
+    work: List[Tuple[ast.AST, Source]] = []
+
+    def mark(node: ast.AST, src: Source):
+        if traced.add(node, src):
+            work.append((node, src))
+
+    # ---- pass 1: entry points anywhere in the scanned sources
+    for src in sources:
+        for node in ast.walk(src.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    d = dec.func if isinstance(dec, ast.Call) else dec
+                    tail = _tail(d)
+                    if tail == "jit":
+                        mark(node, src)
+                    elif tail == "partial" and isinstance(dec, ast.Call):
+                        if any(_tail(a) == "jit" for a in dec.args):
+                            mark(node, src)
+            if not isinstance(node, ast.Call):
+                continue
+            argpos = _is_jax_combinator(src, index, node)
+            if argpos is None:
+                continue
+            enclosing_fn = src.enclosing_function(node)
+            cls = src.enclosing_class(node)
+            for i in argpos:
+                if i >= len(node.args):
+                    continue
+                for tnode, tsrc in _resolve_traceable(
+                        index, src, node.args[i], enclosing_fn,
+                        cls.name if cls else None, by_method_name=True):
+                    mark(tnode, tsrc)
+
+    # ---- pass 2: closure over calls made from traced code
+    while work:
+        fn, src = work.pop()
+        cls = src.enclosing_class(fn)
+        for node in ast.walk(fn):
+            # nested defs are the loop/scan bodies: traced
+            if node is not fn and isinstance(
+                    node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                mark(node, src)
+            if not isinstance(node, ast.Call):
+                continue
+            argpos = _is_jax_combinator(src, index, node)
+            if argpos is not None:
+                for i in argpos:
+                    if i < len(node.args):
+                        for tnode, tsrc in _resolve_traceable(
+                                index, src, node.args[i], fn,
+                                cls.name if cls else None,
+                                by_method_name=True):
+                            mark(tnode, tsrc)
+                continue
+            # ordinary call: conservative resolution (no global
+            # method-name matching — too many false positives)
+            for tnode, tsrc in _resolve_traceable(
+                    index, src, node.func, fn,
+                    cls.name if cls else None, by_method_name=False):
+                mark(tnode, tsrc)
+    return traced

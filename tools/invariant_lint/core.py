@@ -1,0 +1,168 @@
+"""Shared lint infrastructure: parsed sources, parent links, dotted
+attribute paths, findings, and the in-line suppression syntax.
+
+Suppressions: a trailing (or own-line) comment of the form
+
+    # lint: disable=IL004 indices are mod-L, in-bounds by construction
+
+suppresses those rule ids for every physical line the flagged statement
+spans.  A suppression **without a reason is ignored** — the point of the
+syntax is to leave the justification next to the exception.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Set
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*lint:\s*disable=(IL\d{3}(?:\s*,\s*IL\d{3})*)\s*(.*)")
+
+
+@dataclass
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+    def to_json(self) -> Dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message}
+
+
+@dataclass
+class Source:
+    """One parsed file: AST with parent links plus suppression map."""
+    path: str
+    text: str
+    tree: ast.Module
+    lines: List[str]
+    parents: Dict[ast.AST, ast.AST] = field(default_factory=dict)
+    # line number -> set of suppressed rule ids (reasoned suppressions only)
+    suppress: Dict[int, Set[str]] = field(default_factory=dict)
+    # suppressions that were written without a reason (surfaced as findings)
+    bare_suppress: List[int] = field(default_factory=list)
+
+    @classmethod
+    def parse(cls, path: str) -> "Source":
+        with open(path, "r") as f:
+            text = f.read()
+        tree = ast.parse(text, filename=path)
+        src = cls(path=path, text=text, tree=tree, lines=text.splitlines())
+        for parent in ast.walk(tree):
+            for child in ast.iter_child_nodes(parent):
+                src.parents[child] = parent
+        for i, line in enumerate(src.lines, start=1):
+            m = _SUPPRESS_RE.search(line)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group(1).split(",")}
+            if not m.group(2).strip():
+                src.bare_suppress.append(i)
+                continue
+            src.suppress.setdefault(i, set()).update(rules)
+        return src
+
+    def suppressed(self, rule: str, node: ast.AST) -> bool:
+        lo = getattr(node, "lineno", 0)
+        hi = getattr(node, "end_lineno", lo) or lo
+        if any(rule in self.suppress.get(ln, ())
+               for ln in range(lo, hi + 1)):
+            return True
+        # own-line suppression comment directly above the statement
+        prev = lo - 1
+        if rule in self.suppress.get(prev, ()) and \
+                0 < prev <= len(self.lines) and \
+                self.lines[prev - 1].lstrip().startswith("#"):
+            return True
+        return False
+
+    def ancestors(self, node: ast.AST) -> Iterable[ast.AST]:
+        cur = self.parents.get(node)
+        while cur is not None:
+            yield cur
+            cur = self.parents.get(cur)
+
+    def enclosing_function(self, node: ast.AST) -> Optional[ast.AST]:
+        for anc in self.ancestors(node):
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return anc
+        return None
+
+    def enclosing_class(self, node: ast.AST) -> Optional[ast.ClassDef]:
+        for anc in self.ancestors(node):
+            if isinstance(anc, ast.ClassDef):
+                return anc
+        return None
+
+
+def attr_path(node: ast.AST) -> Optional[str]:
+    """Dotted path for Name/Attribute chains ('self.eng._refill'),
+    None for anything with a non-trivial base (calls, subscripts)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_path(call: ast.Call) -> Optional[str]:
+    return attr_path(call.func)
+
+
+def assign_targets(stmt: ast.AST) -> List[str]:
+    """Dotted paths written by an assignment-like statement (flattens
+    tuple/list targets; includes for-loop targets and ``del``)."""
+    out: List[str] = []
+
+    def add(t: ast.AST):
+        if isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                add(e)
+        elif isinstance(t, ast.Starred):
+            add(t.value)
+        else:
+            p = attr_path(t)
+            if p:
+                out.append(p)
+
+    if isinstance(stmt, ast.Assign):
+        for t in stmt.targets:
+            add(t)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign, ast.NamedExpr)):
+        add(stmt.target)
+    elif isinstance(stmt, ast.For):
+        add(stmt.target)
+    elif isinstance(stmt, ast.Delete):
+        for t in stmt.targets:
+            add(t)
+    return out
+
+
+def iter_py_files(paths: List[str]) -> List[str]:
+    files: List[str] = []
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            files.append(p)
+        elif os.path.isdir(p):
+            for root, _dirs, names in os.walk(p):
+                if "__pycache__" in root:
+                    continue
+                for n in sorted(names):
+                    if n.endswith(".py"):
+                        files.append(os.path.join(root, n))
+    return files
+
+
+def load_sources(paths: List[str]) -> List[Source]:
+    return [Source.parse(f) for f in iter_py_files(paths)]

@@ -1,0 +1,168 @@
+"""Module index: maps every scanned file to its dotted module name and
+records imports, top-level functions, and class methods, so checkers
+can resolve call expressions across the package without importing it.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .core import Source, attr_path
+
+
+@dataclass
+class FuncInfo:
+    name: str
+    qualname: str            # "module:Class.meth" or "module:fn"
+    node: ast.AST            # FunctionDef / AsyncFunctionDef / Lambda
+    source: Source
+    cls: Optional[str] = None
+
+
+@dataclass
+class ModuleInfo:
+    name: str                # dotted ("repro.models.cache"), "" if unrooted
+    source: Source
+    # local alias -> dotted module name ("np" -> "numpy",
+    # "cache_lib" -> "repro.models.cache")
+    imports: Dict[str, str] = field(default_factory=dict)
+    # name imported via ``from X import y [as z]`` -> "X.y"
+    symbols: Dict[str, str] = field(default_factory=dict)
+    functions: Dict[str, FuncInfo] = field(default_factory=dict)
+    classes: Dict[str, Dict[str, FuncInfo]] = field(default_factory=dict)
+
+
+def _module_name(path: str) -> str:
+    """Dotted module name relative to the nearest 'src/' segment (the
+    repo convention), else the bare stem."""
+    norm = os.path.normpath(path)
+    parts = norm.split(os.sep)
+    if "src" in parts:
+        parts = parts[parts.index("src") + 1:]
+    name = ".".join(parts)
+    if name.endswith(".py"):
+        name = name[:-3]
+    if name.endswith(".__init__"):
+        name = name[: -len(".__init__")]
+    return name
+
+
+class ModuleIndex:
+    def __init__(self, sources: List[Source]):
+        self.modules: Dict[str, ModuleInfo] = {}
+        self.by_source: Dict[str, ModuleInfo] = {}
+        # method name -> every FuncInfo with that method name (used only
+        # to resolve jit entry points like ``jax.jit(self.model.decode_step)``)
+        self.methods: Dict[str, List[FuncInfo]] = {}
+        for src in sources:
+            self._index(src)
+
+    def _index(self, src: Source):
+        mod = ModuleInfo(name=_module_name(src.path), source=src)
+        self.modules[mod.name] = mod
+        self.by_source[src.path] = mod
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    mod.imports[a.asname or a.name.split(".")[0]] = a.name
+            elif isinstance(node, ast.ImportFrom):
+                base = node.module or ""
+                if node.level:  # relative import: resolve against package
+                    pkg = mod.name.split(".")
+                    pkg = pkg[: len(pkg) - node.level]
+                    base = ".".join(pkg + ([node.module] if node.module else []))
+                for a in node.names:
+                    local = a.asname or a.name
+                    full = f"{base}.{a.name}" if base else a.name
+                    mod.symbols[local] = full
+                    # ``from repro.models import cache as cache_lib`` imports
+                    # a module, not a symbol; record it as an alias too
+                    mod.imports.setdefault(local, full)
+        for node in src.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                mod.functions[node.name] = FuncInfo(
+                    node.name, f"{mod.name}:{node.name}", node, src)
+            elif isinstance(node, ast.ClassDef):
+                meths: Dict[str, FuncInfo] = {}
+                for item in node.body:
+                    if isinstance(item, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                        fi = FuncInfo(item.name,
+                                      f"{mod.name}:{node.name}.{item.name}",
+                                      item, src, cls=node.name)
+                        meths[item.name] = fi
+                        self.methods.setdefault(item.name, []).append(fi)
+                mod.classes[node.name] = meths
+
+    # ----------------------------------------------------------- resolution
+
+    def resolve_alias(self, src: Source, alias: str) -> Optional[str]:
+        """Dotted module path an alias refers to in ``src``, if imported."""
+        mod = self.by_source.get(src.path)
+        return mod.imports.get(alias) if mod else None
+
+    def resolve_symbol(self, src: Source, name: str) -> Optional[str]:
+        """Full dotted path of a ``from X import name`` symbol."""
+        mod = self.by_source.get(src.path)
+        return mod.symbols.get(name) if mod else None
+
+    def resolve_call_target(self, src: Source, func: ast.AST,
+                            enclosing_class: Optional[str] = None,
+                            by_method_name: bool = False
+                            ) -> List[FuncInfo]:
+        """Best-effort resolution of a callable expression to in-repo
+        function defs.  ``by_method_name=True`` additionally matches a
+        trailing attribute against every class method with that name
+        (used for jit entry points only — too loose for general calls).
+        """
+        mod = self.by_source.get(src.path)
+        out: List[FuncInfo] = []
+        if isinstance(func, ast.Name):
+            if mod and func.id in mod.functions:
+                out.append(mod.functions[func.id])
+            elif mod and func.id in mod.symbols:
+                full = mod.symbols[func.id]
+                owner, _, fn = full.rpartition(".")
+                target = self.modules.get(owner)
+                if target and fn in target.functions:
+                    out.append(target.functions[fn])
+        elif isinstance(func, ast.Attribute):
+            path = attr_path(func)
+            if path is None:
+                return out
+            head, _, rest = path.partition(".")
+            if head == "self" and mod and enclosing_class:
+                if rest in mod.classes.get(enclosing_class, {}):
+                    out.append(mod.classes[enclosing_class][rest])
+                    return out
+            # module-alias call: ``cache_lib.write_token``
+            owner = self.resolve_alias(src, head) if mod else None
+            if owner and "." not in rest:
+                target = self.modules.get(owner)
+                if target and rest in target.functions:
+                    out.append(target.functions[rest])
+                    return out
+                if target is None:
+                    # attribute on an external module (jnp.add, np.where):
+                    # never fall through to method-name matching
+                    return out
+            if by_method_name:
+                out.extend(self.methods.get(func.attr, []))
+        return out
+
+    def project_prefix(self, src: Source, node: ast.AST) -> Optional[str]:
+        """Dotted path of the module an attribute/name call routes
+        through, e.g. ``obs_metrics.registry`` -> 'repro.obs.metrics'."""
+        if isinstance(node, ast.Attribute):
+            base = node.value
+            while isinstance(base, ast.Attribute):
+                base = base.value
+            if isinstance(base, ast.Name):
+                return self.resolve_alias(src, base.id)
+        elif isinstance(node, ast.Name):
+            sym = self.resolve_symbol(src, node.id)
+            if sym:
+                return sym.rpartition(".")[0]
+        return None

@@ -1,0 +1,40 @@
+"""Per-rule checkers.  Each module exposes ``RULE`` (the id) and
+``check(sources, index, traced)`` returning findings; ``run_rules``
+builds the shared traced-set once and dispatches."""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from ..callgraph import build_traced_set
+from ..core import Finding, Source
+from ..modindex import ModuleIndex
+from . import (il001_host_calls, il002_donation, il003_recompile,
+               il004_scatter, il005_obs_gating, il006_silent_except,
+               il007_wallclock)
+
+_MODULES = [il001_host_calls, il002_donation, il003_recompile, il004_scatter,
+            il005_obs_gating, il006_silent_except, il007_wallclock]
+
+ALL_RULES: Dict[str, object] = {m.RULE: m for m in _MODULES}
+
+
+def run_rules(sources: List[Source], index: Optional[ModuleIndex] = None,
+              rules: Optional[List[str]] = None) -> List[Finding]:
+    index = index or ModuleIndex(sources)
+    traced = build_traced_set(sources, index)
+    findings: List[Finding] = []
+    for rid, mod in ALL_RULES.items():
+        if rules and rid not in rules:
+            continue
+        for f in mod.check(sources, index, traced):
+            node_like = f  # findings already filtered for suppression per-rule
+            findings.append(node_like)
+    # a suppression comment with no reason never suppresses; surface it
+    for src in sources:
+        for line in src.bare_suppress:
+            findings.append(Finding(
+                "IL000", src.path, line, 1,
+                "suppression without a reason is ignored — write "
+                "'# lint: disable=IL00x <why this site is exempt>'"))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings

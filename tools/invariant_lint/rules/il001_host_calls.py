@@ -1,0 +1,119 @@
+"""IL001 — no host-side calls inside jit-traced/scanned code.
+
+Instrumentation never enters jitted code (docs/ARCHITECTURE.md): a
+clock read, print, metrics push, or forced device->host transfer inside
+a traced function either burns trace-time work into the compiled
+program, silently measures nothing (it runs once, at trace time), or
+forces a blocking transfer every step.  Flags, inside any function the
+call-graph walk proves reachable from a jit/scan/while/pallas entry:
+
+  * ``time.*`` calls and ``perf_counter``-style names imported from time
+  * ``print(...)`` (use ``jax.debug.print`` for traced values)
+  * anything routed through ``repro.obs`` (spans, metrics, recorder),
+    including method calls on locals bound from ``get_tracer()``/
+    ``registry()``
+  * ``np.asarray(...)`` / ``.item()`` — host transfers
+  * ``float(x)`` / ``int(x)`` on a direct function parameter (a tracer)
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from ..callgraph import TracedSet
+from ..core import Finding, Source, attr_path
+from ..modindex import ModuleIndex
+
+RULE = "IL001"
+
+_TIME_FNS = {"time", "perf_counter", "monotonic", "process_time",
+             "perf_counter_ns", "time_ns", "sleep"}
+_OBS_PREFIX = "repro.obs"
+
+
+def _param_names(fn: ast.AST) -> Set[str]:
+    args = getattr(fn, "args", None)
+    if args is None:
+        return set()
+    names = [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
+    for a in (args.vararg, args.kwarg):
+        if a is not None:
+            names.append(a.arg)
+    return set(names)
+
+
+def _obs_locals(fn: ast.AST, src: Source, index: ModuleIndex) -> Set[str]:
+    """Local names bound from repro.obs factories (``tr = get_tracer()``,
+    ``reg = registry()``): calls on them are obs calls."""
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Assign) or not isinstance(node.value,
+                                                              ast.Call):
+            continue
+        owner = index.project_prefix(src, node.value.func)
+        if owner and owner.startswith(_OBS_PREFIX):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+    return out
+
+
+def check(sources: List[Source], index: ModuleIndex,
+          traced: TracedSet) -> List[Finding]:
+    findings: List[Finding] = []
+    for fn, src in traced.items():
+        params = _param_names(fn)
+        obs_vars = _obs_locals(fn, src, index)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            msg = _banned(node, src, index, params, obs_vars)
+            if msg and not src.suppressed(RULE, node):
+                findings.append(Finding(RULE, src.path, node.lineno,
+                                        node.col_offset + 1, msg))
+    return findings
+
+
+def _banned(call: ast.Call, src: Source, index: ModuleIndex,
+            params: Set[str], obs_vars: Set[str]) -> str:
+    func = call.func
+    path = attr_path(func)
+    root = path.split(".")[0] if path else None
+
+    if isinstance(func, ast.Name):
+        if func.id == "print":
+            return ("print() inside traced code runs at trace time only — "
+                    "use jax.debug.print")
+        sym = index.resolve_symbol(src, func.id)
+        if sym and sym.startswith("time."):
+            return (f"clock read {func.id}() inside traced code measures "
+                    "trace time, not runtime")
+        if sym and sym.startswith(_OBS_PREFIX):
+            return (f"obs call {func.id}() inside traced code — "
+                    "instrumentation must stay host-side")
+        if func.id in ("float", "int") and len(call.args) == 1 and \
+                isinstance(call.args[0], ast.Name) and \
+                call.args[0].id in params:
+            return (f"{func.id}() on parameter '{call.args[0].id}' forces a "
+                    "host transfer of a tracer")
+        return ""
+
+    if isinstance(func, ast.Attribute):
+        if func.attr == "item" and not call.args:
+            return ".item() inside traced code forces a host transfer"
+        if root is None:
+            return ""
+        if root in obs_vars:
+            return (f"call on obs object '{root}' inside traced code — "
+                    "instrumentation must stay host-side")
+        owner = index.resolve_alias(src, root)
+        if owner == "time" and func.attr in _TIME_FNS:
+            return (f"time.{func.attr}() inside traced code measures trace "
+                    "time, not runtime")
+        if owner == "numpy" and func.attr in ("asarray", "ascontiguousarray"):
+            return (f"np.{func.attr}() on traced values forces a host "
+                    "transfer — use jnp")
+        if owner and owner.startswith(_OBS_PREFIX):
+            return (f"obs call {path}() inside traced code — "
+                    "instrumentation must stay host-side")
+    return ""

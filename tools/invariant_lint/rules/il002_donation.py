@@ -1,0 +1,193 @@
+"""IL002 — donation discipline: a buffer passed at a ``donate_argnums``
+position is dead after the call.
+
+XLA may alias the donated input's storage into the outputs; the caller
+must immediately rebind it (``tok, cache = self._decode(params, tok,
+cache)``) and never read the old reference again.  On TPU/GPU a
+use-after-donate reads garbage or raises; on CPU donation is a no-op
+and the bug ships silently — hence a static rule (and the runtime
+poisoner in tools/sanitize.py).
+
+The checker records every ``jax.jit(..., donate_argnums=...)`` wrapper
+assigned to a name (``self._refill = jax.jit(...)``) or declared via a
+``@partial(jax.jit, donate_argnums=...)`` decorator, then inspects each
+call site: a donated positional argument that is a plain name/attribute
+path must be re-assigned before any later read in the same function.
+Inside a loop the path must be rebound somewhere in the loop body,
+otherwise the next iteration reads a donated buffer.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..callgraph import TracedSet
+from ..core import Finding, Source, assign_targets, attr_path
+from ..modindex import ModuleIndex
+
+RULE = "IL002"
+
+
+def _donate_positions(call: ast.Call) -> Tuple[int, ...]:
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return (v.value,)
+        if isinstance(v, (ast.Tuple, ast.List)):
+            out = []
+            for e in v.elts:
+                if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                    out.append(e.value)
+            return tuple(out)
+    return ()
+
+
+def _is_jit_call(call: ast.Call) -> bool:
+    f = call.func
+    tail = f.attr if isinstance(f, ast.Attribute) else (
+        f.id if isinstance(f, ast.Name) else None)
+    return tail == "jit"
+
+
+def _collect_donated(sources: List[Source]) -> Dict[str, Tuple[int, ...]]:
+    """Callable name -> donated positional indices."""
+    donated: Dict[str, Tuple[int, ...]] = {}
+    for src in sources:
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value,
+                                                           ast.Call):
+                call = node.value
+                if not _is_jit_call(call):
+                    continue
+                pos = _donate_positions(call)
+                if not pos:
+                    continue
+                for t in node.targets:
+                    p = attr_path(t)
+                    if p:
+                        donated[p.split(".")[-1]] = pos
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if isinstance(dec, ast.Call):
+                        pos = _donate_positions(dec)
+                        if pos and (_is_jit_call(dec) or any(
+                                isinstance(a, (ast.Name, ast.Attribute)) and
+                                (getattr(a, "attr", None) == "jit" or
+                                 getattr(a, "id", None) == "jit")
+                                for a in dec.args)):
+                            donated[node.name] = pos
+    return donated
+
+
+def _stmt_of(src: Source, node: ast.AST) -> Optional[ast.stmt]:
+    cur: Optional[ast.AST] = node
+    while cur is not None and not isinstance(cur, ast.stmt):
+        cur = src.parents.get(cur)
+    return cur
+
+
+def check(sources: List[Source], index: ModuleIndex,
+          traced: TracedSet) -> List[Finding]:
+    donated = _collect_donated(sources)
+    if not donated:
+        return []
+    findings: List[Finding] = []
+    seen: Set[Tuple[str, int, str]] = set()
+    for src in sources:
+        for call in ast.walk(src.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            f = call.func
+            name = f.attr if isinstance(f, ast.Attribute) else (
+                f.id if isinstance(f, ast.Name) else None)
+            if name not in donated:
+                continue
+            fn = src.enclosing_function(call)
+            if fn is None:
+                continue
+            stmt = _stmt_of(src, call)
+            if stmt is None:
+                continue
+            for k in donated[name]:
+                if k >= len(call.args):
+                    continue
+                path = attr_path(call.args[k])
+                if path is None or path == "self":
+                    continue
+                for line, why in _use_after_donate(src, fn, stmt, call, path):
+                    key = (src.path, line, path)
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                    node_for_suppress = ast.Module(body=[], type_ignores=[])
+                    node_for_suppress.lineno = line
+                    node_for_suppress.end_lineno = line
+                    if not src.suppressed(RULE, node_for_suppress):
+                        findings.append(Finding(
+                            RULE, src.path, line, 1,
+                            f"'{path}' was donated to {name}() at line "
+                            f"{call.lineno} and {why} — rebind it from the "
+                            "call's results before any further use"))
+    return findings
+
+
+def _use_after_donate(src: Source, fn: ast.AST, call_stmt: ast.stmt,
+                      call: ast.Call, path: str):
+    """Yield (line, why) for reads of ``path`` that can observe the
+    donated buffer after the call."""
+    prefix = path + "."
+    reads: List[ast.AST] = []
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.Name, ast.Attribute)) and \
+                isinstance(getattr(node, "ctx", None), ast.Load) and \
+                attr_path(node) == path:
+            reads.append(node)
+    kills: List[ast.stmt] = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.stmt):
+            tgts = assign_targets(node)
+            if any(t == path or t.startswith(prefix) or
+                   path.startswith(t + ".") for t in tgts):
+                kills.append(node)
+
+    # linear scan: reads textually after the call statement
+    for r in reads:
+        if r.lineno <= (call_stmt.end_lineno or call_stmt.lineno):
+            continue
+        saved = any(
+            k is call_stmt or
+            (k.lineno >= call_stmt.lineno and
+             (k.end_lineno or k.lineno) < r.lineno)
+            for k in kills)
+        if not saved:
+            yield r.lineno, "is read afterwards"
+
+    # loop rule: call inside a loop with no rebinding anywhere in the body
+    loop = None
+    for anc in src.ancestors(call_stmt):
+        if isinstance(anc, (ast.For, ast.While)):
+            loop = anc
+            break
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            break
+    if loop is None:
+        return
+    killed_in_loop = any(_within(loop, k) for k in kills)
+    if killed_in_loop:
+        return
+    yield call.lineno, ("is donated again on the next loop iteration "
+                        "(never rebound in the loop body)")
+    for r in reads:
+        if _within(loop, r) and not _within(call, r):
+            yield r.lineno, ("is read on the next loop iteration (never "
+                            "rebound in the loop body)")
+
+
+def _within(outer: ast.AST, node: ast.AST) -> bool:
+    lo = getattr(outer, "lineno", None)
+    hi = getattr(outer, "end_lineno", None)
+    if lo is None or hi is None:
+        return False
+    return lo <= node.lineno <= hi

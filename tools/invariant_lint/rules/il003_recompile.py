@@ -1,0 +1,71 @@
+"""IL003 — recompile hazards: fresh ``jax.jit`` wrappers on hot paths.
+
+Bounded serving compilations (docs/ARCHITECTURE.md) requires every
+trace to be paid once at setup.  A ``jax.jit(...)`` wrapper created
+inside a loop, or created and immediately invoked, has an empty
+compilation cache each time: every execution recompiles.  Python values
+that vary per call must instead be ``static_argnames`` on a wrapper
+built once (engine ``__init__``, module scope, or a decorator).
+
+Flags:
+  * ``jax.jit(f)(args)`` — immediate invocation of a fresh wrapper
+  * ``jax.jit(...)`` lexically inside a ``for``/``while`` body
+    (AOT chains ``jax.jit(f).lower(...)`` are exempt: lowering once per
+    sweep point is the point of the dryrun tool)
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..callgraph import TracedSet
+from ..core import Finding, Source, attr_path
+from ..modindex import ModuleIndex
+
+RULE = "IL003"
+
+
+def _is_jit(call: ast.Call) -> bool:
+    f = call.func
+    tail = f.attr if isinstance(f, ast.Attribute) else (
+        f.id if isinstance(f, ast.Name) else None)
+    if tail != "jit":
+        return False
+    path = attr_path(f)
+    return path in ("jit", "jax.jit") or (path or "").endswith(".jit")
+
+
+def check(sources: List[Source], index: ModuleIndex,
+          traced: TracedSet) -> List[Finding]:
+    findings: List[Finding] = []
+    for src in sources:
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call) or not _is_jit(node):
+                continue
+            if src.suppressed(RULE, node):
+                continue
+            parent = src.parents.get(node)
+            # jax.jit(f)(...) — wrapper discarded after one call
+            if isinstance(parent, ast.Call) and parent.func is node:
+                findings.append(Finding(
+                    RULE, src.path, node.lineno, node.col_offset + 1,
+                    "jax.jit(...) invoked immediately: the wrapper (and its "
+                    "compile cache) is discarded after one call — build it "
+                    "once and reuse it"))
+                continue
+            # AOT chains compile deliberately, once per lowering
+            if isinstance(parent, ast.Attribute) and parent.attr in (
+                    "lower", "trace", "eval_shape"):
+                continue
+            for anc in src.ancestors(node):
+                if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    break
+                if isinstance(anc, (ast.For, ast.While)):
+                    findings.append(Finding(
+                        RULE, src.path, node.lineno, node.col_offset + 1,
+                        "jax.jit(...) inside a loop builds a fresh wrapper "
+                        "per iteration — every execution recompiles; hoist "
+                        "the wrapper and make varying Python values "
+                        "static_argnames"))
+                    break
+    return findings

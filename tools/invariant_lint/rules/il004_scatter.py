@@ -1,0 +1,143 @@
+"""IL004 — Pallas/paged scatter safety.
+
+The paged KV cache addresses pool blocks through data-dependent block
+tables; what an out-of-range computed index does in a ``.at[...]``
+scatter is platform-defined (jax leaves it unspecified), so a dead lane
+can silently clobber a neighbouring row's blocks.  The repo convention
+(docs/ARCHITECTURE.md, paged-write invariant) is to route every dead
+lane to a positive OOB sentinel and scatter with ``mode="drop"`` so
+dead writes provably vanish on every backend.
+
+Flags ``.at[...]`` scatters (``set``/``add``/``max``/``min``/``mul``)
+whose index contains anything computed (names, arithmetic, gathered
+arrays — not literal ints / slices of literals / ellipsis) and that do
+not pass ``mode="drop"``.  Sites whose indices are in-bounds by
+construction carry a reasoned suppression instead.
+
+Also checks, where they are integer literals, that ``pl.BlockSpec``
+block dims divide the ``out_shape`` dims of the enclosing
+``pallas_call`` — a non-dividing literal block silently reads/writes a
+padded fringe.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from ..callgraph import TracedSet
+from ..core import Finding, Source, attr_path
+from ..modindex import ModuleIndex
+
+RULE = "IL004"
+
+_SCATTER_METHODS = {"set", "add", "max", "min", "mul", "divide", "power"}
+
+
+def _index_is_computed(idx: ast.AST) -> bool:
+    """True if any component of the subscript is not a static literal."""
+    if isinstance(idx, ast.Tuple):
+        return any(_index_is_computed(e) for e in idx.elts)
+    if isinstance(idx, ast.Constant):  # ints, Ellipsis, None
+        return False
+    if isinstance(idx, ast.UnaryOp) and isinstance(idx.operand, ast.Constant):
+        return False
+    if isinstance(idx, ast.Slice):
+        return any(p is not None and _index_is_computed(p)
+                   for p in (idx.lower, idx.upper, idx.step))
+    return True
+
+
+def _has_mode_drop(call: ast.Call) -> bool:
+    for kw in call.keywords:
+        if kw.arg == "mode" and isinstance(kw.value, ast.Constant):
+            return kw.value.value == "drop"
+    return False
+
+
+def check(sources: List[Source], index: ModuleIndex,
+          traced: TracedSet) -> List[Finding]:
+    findings: List[Finding] = []
+    for src in sources:
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Call):
+                f = _scatter_finding(src, node)
+                if f:
+                    findings.append(f)
+                findings.extend(_blockspec_findings(src, node))
+    return findings
+
+
+def _scatter_finding(src: Source, call: ast.Call) -> Optional[Finding]:
+    # shape: <expr>.at[idx].set(values, ...)
+    f = call.func
+    if not (isinstance(f, ast.Attribute) and f.attr in _SCATTER_METHODS):
+        return None
+    sub = f.value
+    if not (isinstance(sub, ast.Subscript) and
+            isinstance(sub.value, ast.Attribute) and sub.value.attr == "at"):
+        return None
+    if not _index_is_computed(sub.slice):
+        return None
+    if _has_mode_drop(call):
+        return None
+    if src.suppressed(RULE, call):
+        return None
+    return Finding(
+        RULE, src.path, call.lineno, call.col_offset + 1,
+        f".at[...].{f.attr}() with computed indices and no mode=\"drop\" — "
+        "out-of-range behaviour is platform-defined; route dead lanes to a "
+        "positive OOB sentinel and scatter with mode=\"drop\" (or suppress "
+        "with the reason the indices are in-bounds by construction)")
+
+
+def _blockspec_findings(src: Source, call: ast.Call) -> List[Finding]:
+    """Literal BlockSpec dims must divide literal out_shape dims."""
+    tail = call.func.attr if isinstance(call.func, ast.Attribute) else (
+        call.func.id if isinstance(call.func, ast.Name) else None)
+    if tail != "pallas_call":
+        return []
+    out_dims = _literal_dims_in(call, "ShapeDtypeStruct")
+    if not out_dims:
+        return []
+    findings: List[Finding] = []
+    for node in ast.walk(call):
+        if not isinstance(node, ast.Call):
+            continue
+        t = node.func.attr if isinstance(node.func, ast.Attribute) else (
+            node.func.id if isinstance(node.func, ast.Name) else None)
+        if t != "BlockSpec" or not node.args:
+            continue
+        blk = _literal_tuple(node.args[0])
+        if blk is None or len(blk) != len(out_dims):
+            continue
+        for b, s in zip(blk, out_dims):
+            if b and s and s % b != 0:
+                if not src.suppressed(RULE, node):
+                    findings.append(Finding(
+                        RULE, src.path, node.lineno, node.col_offset + 1,
+                        f"BlockSpec dim {b} does not divide out_shape dim "
+                        f"{s} — the grid walks a padded fringe"))
+                break
+    return findings
+
+
+def _literal_tuple(node: ast.AST) -> Optional[List[Optional[int]]]:
+    if not isinstance(node, ast.Tuple):
+        return None
+    out: List[Optional[int]] = []
+    for e in node.elts:
+        if isinstance(e, ast.Constant) and isinstance(e.value, int):
+            out.append(e.value)
+        else:
+            out.append(None)
+    return out
+
+
+def _literal_dims_in(call: ast.Call, ctor: str) -> Optional[List[Optional[int]]]:
+    for node in ast.walk(call):
+        if isinstance(node, ast.Call):
+            t = node.func.attr if isinstance(node.func, ast.Attribute) else (
+                node.func.id if isinstance(node.func, ast.Name) else None)
+            if t == ctor and node.args:
+                return _literal_tuple(node.args[0])
+    return None

@@ -1,0 +1,139 @@
+"""IL005 — observability gating: registry pushes behind
+``metrics_enabled()`` / ``tracing_enabled()``.
+
+Observability is free when disabled (docs/ARCHITECTURE.md,
+docs/OBSERVABILITY.md): label formatting, dict hashing, and histogram
+appends must never run on the serving hot path unless the operator
+asked for them.  Every ``registry().counter/gauge/histogram(...)`` push
+must therefore sit under a ``metrics_enabled()``-style guard — either
+lexically, or (for a private ``_push_metrics``-style helper) at every
+one of its same-module call sites.
+
+Guard recognition: an enclosing ``if``/ternary whose test mentions
+``metrics_enabled``/``tracing_enabled``, an ``.enabled`` attribute, or
+a local variable assigned from one of those calls.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from ..callgraph import TracedSet
+from ..core import Finding, Source, attr_path
+from ..modindex import ModuleIndex
+
+RULE = "IL005"
+
+_GUARD_FNS = {"metrics_enabled", "tracing_enabled", "enabled"}
+_PUSH_METHODS = {"counter", "gauge", "histogram"}
+_OBS_MODULE = "repro.obs"
+
+
+def _is_registry_expr(src: Source, index: ModuleIndex,
+                      node: ast.AST, fn: Optional[ast.AST]) -> bool:
+    """True if ``node`` evaluates to the metrics registry: a direct
+    ``registry()`` call or a local assigned from one."""
+    if isinstance(node, ast.Call):
+        path = attr_path(node.func) or ""
+        return path.split(".")[-1] == "registry"
+    if isinstance(node, ast.Name) and fn is not None:
+        for n in ast.walk(fn):
+            if isinstance(n, ast.Assign) and isinstance(n.value, ast.Call):
+                vpath = attr_path(n.value.func) or ""
+                if vpath.split(".")[-1] != "registry":
+                    continue
+                if any(isinstance(t, ast.Name) and t.id == node.id
+                       for t in n.targets):
+                    return True
+    return False
+
+
+def _guard_vars(fn: ast.AST) -> Set[str]:
+    """Locals assigned from a guard call (``telemetry =
+    obs_metrics.metrics_enabled()``)."""
+    out: Set[str] = set()
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Assign) and isinstance(n.value, ast.Call):
+            path = attr_path(n.value.func) or ""
+            if path.split(".")[-1] in _GUARD_FNS:
+                for t in n.targets:
+                    if isinstance(t, ast.Name):
+                        out.add(t.id)
+    return out
+
+
+def _test_is_guard(test: ast.AST, guard_vars: Set[str]) -> bool:
+    for n in ast.walk(test):
+        if isinstance(n, ast.Call):
+            path = attr_path(n.func) or ""
+            if path.split(".")[-1] in _GUARD_FNS:
+                return True
+        elif isinstance(n, ast.Attribute) and n.attr == "enabled":
+            return True
+        elif isinstance(n, ast.Name) and n.id in guard_vars:
+            return True
+    return False
+
+
+def _lexically_guarded(src: Source, node: ast.AST,
+                       guard_vars: Set[str]) -> bool:
+    for anc in src.ancestors(node):
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return False
+        if isinstance(anc, (ast.If, ast.IfExp)) and \
+                _test_is_guard(anc.test, guard_vars):
+            return True
+    return False
+
+
+def _callsites_guarded(src: Source, fname: str) -> bool:
+    """All same-module calls of ``fname`` sit under a guard."""
+    sites = []
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.Call):
+            path = attr_path(node.func) or ""
+            if path.split(".")[-1] == fname:
+                sites.append(node)
+    sites = [s for s in sites
+             if src.enclosing_function(s) is not None and
+             src.enclosing_function(s).name != fname]
+    if not sites:
+        return False
+    for s in sites:
+        fn = src.enclosing_function(s)
+        if not _lexically_guarded(src, s, _guard_vars(fn)):
+            return False
+    return True
+
+
+def check(sources: List[Source], index: ModuleIndex,
+          traced: TracedSet) -> List[Finding]:
+    findings: List[Finding] = []
+    for src in sources:
+        mod = index.by_source.get(src.path)
+        if mod and mod.name.startswith(_OBS_MODULE):
+            continue  # the obs layer itself implements the registry
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if not (isinstance(f, ast.Attribute) and
+                    f.attr in _PUSH_METHODS):
+                continue
+            fn = src.enclosing_function(node)
+            if not _is_registry_expr(src, index, f.value, fn):
+                continue
+            if fn is None:
+                continue
+            if _lexically_guarded(src, node, _guard_vars(fn)):
+                continue
+            if _callsites_guarded(src, fn.name):
+                continue
+            if src.suppressed(RULE, node):
+                continue
+            findings.append(Finding(
+                RULE, src.path, node.lineno, node.col_offset + 1,
+                f"registry push .{f.attr}(...) not guarded by "
+                "metrics_enabled()/tracing_enabled() — metrics must be "
+                "free when disabled (gate the push or its call site)"))
+    return findings

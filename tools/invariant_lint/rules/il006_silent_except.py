@@ -1,0 +1,77 @@
+"""IL006 — no bare/broad *silent* ``except``.
+
+A ``try`` that swallows everything hides real failures (the PR-8
+profiler hooks silently ate every start_trace error).  Rules:
+
+  * ``except:`` (bare) is always flagged — it also catches
+    KeyboardInterrupt/SystemExit.
+  * ``except Exception`` / ``except BaseException`` is flagged when the
+    handler is *silent*: nothing in its body calls anything (no log, no
+    warn, no record), re-raises, or stores the error — just ``pass`` /
+    ``return <const>`` / ``continue``.
+
+Handlers that log-once, attach the traceback to a result record, or
+surface the error some other way pass; deliberate compat shims carry a
+reasoned suppression.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..callgraph import TracedSet
+from ..core import Finding, Source
+from ..modindex import ModuleIndex
+
+RULE = "IL006"
+
+_BROAD = {"Exception", "BaseException"}
+
+
+def _is_broad(handler: ast.ExceptHandler) -> bool:
+    t = handler.type
+    if t is None:
+        return True
+    if isinstance(t, ast.Name):
+        return t.id in _BROAD
+    if isinstance(t, ast.Attribute):
+        return t.attr in _BROAD
+    if isinstance(t, ast.Tuple):
+        return any(isinstance(e, ast.Name) and e.id in _BROAD or
+                   isinstance(e, ast.Attribute) and e.attr in _BROAD
+                   for e in t.elts)
+    return False
+
+
+def _is_silent(handler: ast.ExceptHandler) -> bool:
+    """No call, raise, or use of the caught exception in the handler."""
+    for node in ast.walk(handler):
+        if isinstance(node, (ast.Call, ast.Raise)):
+            return False
+        if handler.name and isinstance(node, ast.Name) and \
+                node.id == handler.name:
+            return False
+    return True
+
+
+def check(sources: List[Source], index: ModuleIndex,
+          traced: TracedSet) -> List[Finding]:
+    findings: List[Finding] = []
+    for src in sources:
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if src.suppressed(RULE, node):
+                continue
+            if node.type is None:
+                findings.append(Finding(
+                    RULE, src.path, node.lineno, node.col_offset + 1,
+                    "bare 'except:' also swallows KeyboardInterrupt/"
+                    "SystemExit — catch Exception at most, and surface "
+                    "the error"))
+            elif _is_broad(node) and _is_silent(node):
+                findings.append(Finding(
+                    RULE, src.path, node.lineno, node.col_offset + 1,
+                    "broad except silently swallows the error — log it, "
+                    "attach it to the result, or narrow the exception type"))
+    return findings

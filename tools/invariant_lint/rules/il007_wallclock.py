@@ -1,0 +1,78 @@
+"""IL007 — durations are measured on the monotonic clock.
+
+``time.time()`` is wall-clock: NTP slews and DST jumps land directly in
+any latency/TTFT/throughput stat computed from its differences, and the
+repo's trace schema declares ``"clock": "perf_counter"``.  Subtracting
+two wall-clock reads is therefore flagged; ``time.time()`` itself stays
+legal for *timestamps* (trace metadata, filenames, log lines).
+
+Detection: a binary ``-`` where either operand is a ``time.time()``
+call or a local variable assigned from one in the same function.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from ..callgraph import TracedSet
+from ..core import Finding, Source, attr_path
+from ..modindex import ModuleIndex
+
+RULE = "IL007"
+
+
+def _is_walltime_call(node: ast.AST, src: Source,
+                      index: ModuleIndex) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    path = attr_path(node.func)
+    if path is None:
+        return False
+    if path == "time.time":
+        root_target = index.resolve_alias(src, "time")
+        return root_target in (None, "time")
+    if "." not in path and path == "time":
+        sym = index.resolve_symbol(src, "time")
+        return sym == "time.time"
+    return False
+
+
+def _walltime_vars(fn: ast.AST, src: Source, index: ModuleIndex) -> Set[str]:
+    out: Set[str] = set()
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Assign) and \
+                _is_walltime_call(n.value, src, index):
+            for t in n.targets:
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+    return out
+
+
+def check(sources: List[Source], index: ModuleIndex,
+          traced: TracedSet) -> List[Finding]:
+    findings: List[Finding] = []
+    seen = set()
+    for src in sources:
+        for fn in ast.walk(src.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            wvars = _walltime_vars(fn, src, index)
+            for node in ast.walk(fn):
+                if not (isinstance(node, ast.BinOp) and
+                        isinstance(node.op, ast.Sub)):
+                    continue
+                if src.suppressed(RULE, node):
+                    continue
+                key = (src.path, node.lineno, node.col_offset)
+                if key in seen:
+                    continue
+                if any(_is_walltime_call(side, src, index) or
+                       (isinstance(side, ast.Name) and side.id in wvars)
+                       for side in (node.left, node.right)):
+                    seen.add(key)
+                    findings.append(Finding(
+                        RULE, src.path, node.lineno, node.col_offset + 1,
+                        "duration computed from wall-clock time.time() — "
+                        "use time.perf_counter() (time.time() is for "
+                        "timestamps only)"))
+    return findings

@@ -1,0 +1,95 @@
+"""CLI for the invariant lint.
+
+    python tools/invariant_lint/run.py --check            # lint src/
+    python tools/invariant_lint/run.py --check path ...   # lint paths
+    python tools/invariant_lint/run.py --check --json out.json
+    python tools/invariant_lint/run.py --list-rules
+
+Exit status: 0 clean, 1 findings, 2 couldn't parse an input file.
+Findings print as ``path:line:col: RULE message`` (clickable in most
+editors/CI logs); ``--json`` additionally writes a machine-readable
+report ``{"version": 1, "findings": [...], "counts": {...}}``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_REPO = os.path.dirname(os.path.dirname(_HERE))
+if os.path.dirname(_HERE) not in sys.path:
+    sys.path.insert(0, os.path.dirname(_HERE))
+
+from invariant_lint import ModuleIndex, load_sources, run_rules  # noqa: E402
+from invariant_lint.rules import ALL_RULES  # noqa: E402
+
+REPORT_VERSION = 1
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to lint (default: the repo's src/)")
+    ap.add_argument("--check", action="store_true",
+                    help="run all rules and exit nonzero on findings")
+    ap.add_argument("--rules", default="",
+                    help="comma-separated subset, e.g. IL001,IL006")
+    ap.add_argument("--json", default="",
+                    help="also write a machine-readable report here")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, mod in sorted(ALL_RULES.items()):
+            doc = (mod.__doc__ or "").strip().splitlines()[0]
+            print(f"{rid}  {doc}")
+        return 0
+
+    paths = args.paths or [os.path.join(_REPO, "src")]
+    try:
+        sources = load_sources(paths)
+    except SyntaxError as e:
+        print(f"parse error: {e.filename}:{e.lineno}: {e.msg}",
+              file=sys.stderr)
+        return 2
+    if not sources:
+        print(f"no python files under {paths}", file=sys.stderr)
+        return 2
+
+    rules = [r.strip() for r in args.rules.split(",") if r.strip()] or None
+    findings = run_rules(sources, ModuleIndex(sources), rules=rules)
+
+    rel = []
+    for f in findings:
+        f.path = os.path.relpath(f.path, _REPO) if f.path.startswith(_REPO) \
+            else f.path
+        rel.append(f)
+    for f in rel:
+        print(f.format())
+
+    if args.json:
+        counts = {}
+        for f in rel:
+            counts[f.rule] = counts.get(f.rule, 0) + 1
+        report = {"version": REPORT_VERSION,
+                  "files_scanned": len(sources),
+                  "findings": [f.to_json() for f in rel],
+                  "counts": counts}
+        d = os.path.dirname(args.json)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.json, "w") as fp:
+            json.dump(report, fp, indent=2, sort_keys=True)
+            fp.write("\n")
+
+    n = len(rel)
+    print(f"invariant_lint: {len(sources)} files, "
+          f"{n} finding{'s' if n != 1 else ''}")
+    return 1 if (args.check and n) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,310 @@
+"""Runtime sanitizers for the serving stack.
+
+Three complementary guards back up the static pass in
+tools/invariant_lint/ with *runtime* enforcement:
+
+* **RecompileGuard** — a context manager over jitted callables that
+  asserts their compile-cache miss budget (generalizing the PR-5
+  compile-cache-bound test: any region of the suite can now declare
+  "no recompiles happen here").
+
+* **Donation poisoner** — ``poison_donated``/``poison_engine`` wrap
+  donating jit wrappers so the donated input arrays are deleted right
+  after each call.  On CPU donation is a no-op and a use-after-donate
+  ships silently; poisoned, it raises ``RuntimeError: Array has been
+  deleted`` exactly where a TPU/GPU would read garbage.
+
+* **Strict numerics + Pallas parity** — ``strict_numerics()`` flips on
+  ``jax_debug_nans`` and ``jax_numpy_rank_promotion="raise"``;
+  ``pallas_parity_report()`` re-runs all four Pallas kernels in
+  interpret mode against their ``kernels/ref.py`` oracles.
+
+CLI (the CI sanitizer job):
+
+    python tools/sanitize.py --parity     # 4-kernel interpret parity
+    python tools/sanitize.py --smoke      # cluster smoke under
+                                          #   debug_nans + rank raise
+    python tools/sanitize.py              # both
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import functools
+import os
+import subprocess
+import sys
+from typing import Dict, Iterable, List, Optional, Tuple
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ------------------------------------------------------- recompile guard
+
+
+class RecompileError(AssertionError):
+    pass
+
+
+class RecompileGuard:
+    """Assert a jit cache-miss budget over a region.
+
+        with RecompileGuard({"decode": eng._decode}) as g:
+            serve_some_traffic()
+        # raises RecompileError if any tracked wrapper recompiled
+
+    ``budget`` is the total number of new cache entries allowed across
+    all tracked callables (default 0: the region must be trace-free).
+    Tracked objects must expose ``_cache_size()`` — every ``jax.jit``
+    wrapper does; non-jitted attributes are skipped, so passing
+    ``jitted_functions(obj)`` wholesale is safe.
+    """
+
+    def __init__(self, tracked: Dict[str, object], budget: int = 0):
+        self.tracked = {name: fn for name, fn in tracked.items()
+                        if hasattr(fn, "_cache_size")}
+        self.budget = int(budget)
+        self._baseline: Dict[str, int] = {}
+
+    def __enter__(self) -> "RecompileGuard":
+        self._baseline = {n: f._cache_size()
+                          for n, f in self.tracked.items()}
+        return self
+
+    def misses(self) -> Dict[str, int]:
+        return {n: f._cache_size() - self._baseline[n]
+                for n, f in self.tracked.items()
+                if f._cache_size() != self._baseline[n]}
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is not None:
+            return False
+        m = self.misses()
+        total = sum(m.values())
+        if total > self.budget:
+            detail = ", ".join(f"{n}: +{k}" for n, k in sorted(m.items()))
+            raise RecompileError(
+                f"{total} jit cache miss(es) inside a RecompileGuard "
+                f"(budget {self.budget}): {detail} — a shape, dtype, or "
+                "static argument varied on a path that must stay compiled")
+        return False
+
+
+def jitted_functions(obj) -> Dict[str, object]:
+    """Every jit wrapper hanging off ``obj`` (engine-style attributes)."""
+    out: Dict[str, object] = {}
+    for name in dir(obj):
+        if name.startswith("__"):
+            continue
+        try:
+            attr = getattr(obj, name)
+        except Exception:  # lint: disable=IL006 attribute probing only
+            continue
+        if hasattr(attr, "_cache_size"):
+            out[name] = attr
+    return out
+
+
+# ------------------------------------------------------ donation poisoner
+
+# Mirrors the ``jax.jit(..., donate_argnums=...)`` wrappers built in
+# serving/engine.py ``__init__``.  tests/test_sanitizers.py asserts this
+# table matches what the IL002 checker extracts from the source, so it
+# cannot drift from the engine.
+ENGINE_DONATIONS: Dict[str, Tuple[int, ...]] = {
+    "_decode": (2,),
+    "_decode_loop": (2,),
+    "_prefill_chunk": (2,),
+    "_decode_cont": (2, 4, 5, 6, 7),
+    "_refill": (2, 3, 4, 5, 6),
+    "_paged_prefill_chunk": (2,),
+    "_paged_refill": (2, 3, 4, 5, 6),
+    "_paged_prefix_prefill": (2,),
+    "_paged_copy_block": (0,),
+}
+
+
+def poison_donated(fn, donate_argnums: Iterable[int]):
+    """Wrap a donating jitted callable: after each call the donated
+    positional inputs are deleted, so any host-side read of the stale
+    reference raises instead of silently working on CPU."""
+    import jax
+
+    donate_argnums = tuple(donate_argnums)
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        out = fn(*args, **kwargs)
+        for i in donate_argnums:
+            if i >= len(args):
+                continue
+            for leaf in jax.tree.leaves(args[i]):
+                if isinstance(leaf, jax.Array) and not leaf.is_deleted():
+                    leaf.delete()
+        return out
+
+    wrapped.__wrapped_donations__ = donate_argnums
+    return wrapped
+
+
+def poison_engine(eng) -> None:
+    """In-place: poison every donating jit wrapper on a ServeEngine, so
+    a whole serving test runs with TPU-faithful donation semantics."""
+    for name, pos in ENGINE_DONATIONS.items():
+        fn = getattr(eng, name, None)
+        if fn is not None and not hasattr(fn, "__wrapped_donations__"):
+            setattr(eng, name, poison_donated(fn, pos))
+
+
+# ------------------------------------------------------- strict numerics
+
+
+@contextlib.contextmanager
+def strict_numerics():
+    """debug_nans + rank_promotion="raise" for the enclosed region."""
+    import jax
+
+    old_nans = jax.config.jax_debug_nans
+    old_rank = jax.config.jax_numpy_rank_promotion
+    jax.config.update("jax_debug_nans", True)
+    jax.config.update("jax_numpy_rank_promotion", "raise")
+    try:
+        yield
+    finally:
+        jax.config.update("jax_debug_nans", old_nans)
+        jax.config.update("jax_numpy_rank_promotion", old_rank)
+
+
+# -------------------------------------------------- Pallas kernel parity
+
+
+def pallas_parity_report(seed: int = 0) -> List[Dict]:
+    """Re-run all four Pallas kernels in interpret mode against their
+    pure-jnp oracles; returns one record per kernel with the max error.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ref
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.kernels.paged_attention import paged_decode_attention_pallas
+    from repro.kernels.topk_retrieval import ivf_topk_pallas, topk_pallas
+
+    rng = np.random.default_rng(seed)
+    results: List[Dict] = []
+
+    def record(name: str, got, want, tol: float = 2e-5):
+        err = float(np.max(np.abs(np.asarray(got, np.float64) -
+                                  np.asarray(want, np.float64))))
+        results.append({"kernel": name, "max_err": err, "tol": tol,
+                        "ok": bool(err <= tol)})
+
+    # flash attention: fringe shapes (S not a block multiple), softcap on
+    B, H, KV, S, hd = 2, 4, 2, 40, 16
+    q = jnp.asarray(rng.standard_normal((B, H, S, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, KV, S, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, KV, S, hd)), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=True, softcap=30.0,
+                                 q_block=16, kv_block=16, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True, softcap=30.0)
+    record("flash_attention", got, want)
+
+    # paged decode attention: -1 (unallocated) table entries, GQA, windows
+    B, H, KV, hd, bs, P = 3, 4, 2, 16, 8, 10
+    q1 = jnp.asarray(rng.standard_normal((B, H, hd)), jnp.float32)
+    k_pool = jnp.asarray(rng.standard_normal((P, bs, KV, hd)), jnp.float32)
+    v_pool = jnp.asarray(rng.standard_normal((P, bs, KV, hd)), jnp.float32)
+    tables = jnp.asarray([[0, 1, 2, -1], [3, 4, -1, -1], [5, 6, 7, 8]],
+                         jnp.int32)
+    first = jnp.asarray([2, 0, 5], jnp.int32)
+    last = jnp.asarray([20, 9, 30], jnp.int32)
+    got = paged_decode_attention_pallas(q1, k_pool, v_pool, tables, first,
+                                        last, softcap=30.0, interpret=True)
+    want = ref.paged_attention_ref(q1, k_pool, v_pool, tables, first, last,
+                                   softcap=30.0)
+    record("paged_attention", got, want)
+
+    # exact top-k: corpus not a block multiple
+    nq, nd, d, kk = 5, 67, 16, 5
+    queries = jnp.asarray(rng.standard_normal((nq, d)), jnp.float32)
+    docs = jnp.asarray(rng.standard_normal((nd, d)), jnp.float32)
+    gs, gi = topk_pallas(queries, docs, kk, q_block=4, d_block=32,
+                         interpret=True)
+    ws, wi = ref.topk_ref(queries, docs, kk)
+    record("topk_scores", gs, ws)
+    record("topk_indices", gi.astype(jnp.int32), wi.astype(jnp.int32), 0.0)
+
+    # IVF probe top-k: ragged lists with -1 id padding
+    n_lists, L, nq, nprobe, kk = 6, 10, 4, 2, 3
+    list_emb = jnp.asarray(rng.standard_normal((n_lists, L, d)), jnp.float32)
+    ids = rng.permutation(n_lists * L).reshape(n_lists, L).astype(np.int32)
+    ids[:, L - 2:] = -1  # padded tails
+    list_ids = jnp.asarray(ids)
+    probe_ids = jnp.asarray(rng.integers(0, n_lists, (nq, nprobe)), jnp.int32)
+    queries = jnp.asarray(rng.standard_normal((nq, d)), jnp.float32)
+    gs, gi = ivf_topk_pallas(queries, list_emb, list_ids, probe_ids, kk,
+                             interpret=True)
+    ws, wi = ref.ivf_topk_ref(queries, list_emb, list_ids, probe_ids, kk)
+    record("ivf_topk_scores", gs, ws)
+    record("ivf_topk_indices", gi.astype(jnp.int32), wi.astype(jnp.int32),
+           0.0)
+    return results
+
+
+# ----------------------------------------------------------- CI entry
+
+
+def run_parity() -> bool:
+    ok = True
+    for rec in pallas_parity_report():
+        status = "PASS" if rec["ok"] else "FAIL"
+        print(f"[parity] {status} {rec['kernel']:18s} "
+              f"max_err={rec['max_err']:.3e} tol={rec['tol']:.0e}")
+        ok = ok and rec["ok"]
+    return ok
+
+
+def run_smoke() -> bool:
+    """The README 2-node cluster smoke, under debug_nans + rank raise
+    (env-configured so the flags are set before jax imports)."""
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["JAX_DEBUG_NANS"] = "True"
+    env["JAX_NUMPY_RANK_PROMOTION"] = "raise"
+    env["PYTHONPATH"] = os.path.join(_REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    cmd = [sys.executable, "-m", "repro.launch.cluster_serve",
+           "--smoke", "--nodes", "2", "--slots", "1", "--paged",
+           "--admission", "sjf"]
+    print("[smoke]", " ".join(cmd))
+    proc = subprocess.run(cmd, env=env, cwd=_REPO)
+    print(f"[smoke] {'PASS' if proc.returncode == 0 else 'FAIL'} "
+          f"(exit {proc.returncode})")
+    return proc.returncode == 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--parity", action="store_true",
+                    help="only the 4-kernel interpret-mode parity check")
+    ap.add_argument("--smoke", action="store_true",
+                    help="only the cluster smoke under strict numerics")
+    args = ap.parse_args(argv)
+    run_all = not (args.parity or args.smoke)
+
+    sys.path.insert(0, os.path.join(_REPO, "src"))
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    ok = True
+    if args.parity or run_all:
+        with strict_numerics():
+            ok = run_parity() and ok
+    if args.smoke or run_all:
+        ok = run_smoke() and ok
+    print(f"sanitize: {'OK' if ok else 'FAILED'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
