@@ -1,0 +1,193 @@
+"""Saturation trace-replay: throughput-vs-SLO frontier for the
+standing node engine under open-loop arrivals.
+
+Sweeps arrival rates over a spike (or ramp) volume trace replayed
+through a fresh 2+-node live cluster per point, with every node in
+standing-engine mode — one long-lived session per node whose frames
+stay warm across scheduler slots.  Before each point the harness
+profiles the nodes and autoscales their batch/chunk knobs from the
+measured capacity (``cluster.replay.autoscale_knobs``).  One extra
+point re-runs the middle rate with the per-slot continuous queue (a
+fresh session every slot) — the TTFT gap between the two is the
+standing engine's headline.
+
+Both modes run the PAGED KV cache: a standing frame lives for the
+whole replay, and only the paged session keeps per-row lengths (a
+finished row's blocks return to the pool), so its decode cost does not
+grow with frame age.  The non-paged shared-position cache climbs
+through ever-larger kv-cap decode buckets as a standing frame ages —
+correct, but the wrong pairing for a long-lived frame (see
+docs/ARCHITECTURE.md, "Standing engine").  Emits ``BENCH_cluster_saturation.json``:
+one frontier row per rate (throughput, TTFT, p95, SLO attainment,
+lost requests, frames) plus the per-slot baseline and the TTFT ratio.
+
+    PYTHONPATH=src python -m benchmarks.cluster_saturation --smoke
+    PYTHONPATH=src python -m benchmarks.cluster_saturation \
+        --rates 30,60,120 --slots 100          # 1e4+ query frontier
+    ... --check          # assert zero lost + standing TTFT wins
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Bench
+from repro.cluster import (ClusterRuntime, LiveNodeStats, LiveWorkload,
+                           autoscale_knobs, replay_trace)
+from repro.core.identifier import OnlineQueryIdentifier
+from repro.launch.cluster_serve import NODE_ARCHS, build_cluster
+from repro.rag.pipeline import split_prompt
+
+
+def _mean_prompt_len(nodes, qas, tok, new_tokens: int) -> float:
+    """Typical tokenized prompt length (question + top-k contexts),
+    estimated from a corpus sample — the chunk-knob input for
+    ``autoscale_knobs``."""
+    node = nodes[0]
+    cap = node.engine.cont_max_prompt_len(new_tokens)
+    texts = [d.text for d in node.docs] or ["context"]
+    lens = []
+    for i, qa in enumerate(qas[:16]):
+        ctxs = [texts[(i + j) % len(texts)] for j in range(node.top_k)]
+        toks, _ = split_prompt(qa.question, ctxs, tok, cap=cap)
+        lens.append(len(toks))
+    return float(np.mean(lens))
+
+
+def run_point(args, rate: float, queue: str) -> dict:
+    """One frontier point: fresh cluster (identical seeds across
+    points), profile, autoscale, open-loop replay at ``rate`` q/s."""
+    nodes, qas, tok, encoder, ident, _ = build_cluster(
+        args.nodes, smoke=True, entities=args.entities,
+        max_len=args.max_len, new_tokens=args.new_tokens,
+        seed=args.seed, update_threshold=max(4, round(rate * args.slot_s)),
+        queue=queue, paged=True)
+    runtime = ClusterRuntime(nodes, ident, seed=args.seed)
+    runtime.initialize()                      # measured capacity profile
+    if not args.no_autoscale:
+        plen = _mean_prompt_len(nodes, qas, tok, args.new_tokens)
+        for node in nodes:
+            knobs = autoscale_knobs(node.capacity.k,
+                                    node.engine.batch_size,
+                                    rate / args.nodes, plen)
+            node.reconfigure(**knobs)
+    base_volume = max(1, round(rate * args.slot_s))
+    # warm-up slot OUTSIDE the timed window: the reconfigured engines
+    # compile their serving programs here, so every point (and both
+    # queue kinds) measures steady state, not who compiled first
+    warm = LiveWorkload(qas, encoder, seed=args.seed + 9)
+    replay_trace(runtime, warm, n_slots=1, slo_s=args.slo,
+                 base_volume=max(4, base_volume // 2), trace="ramp",
+                 seed=args.seed + 9)
+    for node in nodes:
+        node.stats = LiveNodeStats()
+    workload = LiveWorkload(qas, encoder, seed=args.seed + 2)
+    t0 = time.perf_counter()
+    report = replay_trace(runtime, workload, n_slots=args.slots,
+                          slo_s=args.slo, base_volume=base_volume,
+                          trace=args.trace, seed=args.seed + 3)
+    wall = max(time.perf_counter() - t0, 1e-9)
+    lost = sum(node.unfinished() for node in nodes)
+    runtime.close()
+    s = report.summary()
+    ttft = np.array([v for node in nodes for v in node.stats.ttft_s])
+    return {
+        "queries": int(s["queries"]),
+        "throughput_qps": s["queries"] / wall,
+        "ttft_mean_ms": float(ttft.mean()) * 1e3 if ttft.size else 0.0,
+        "ttft_p95_ms": float(np.percentile(ttft, 95)) * 1e3
+        if ttft.size else 0.0,
+        "latency_p95_s": s.get("latency_p95_s", 0.0),
+        "slo_attainment": 1.0 - s.get("drop_rate", 0.0),
+        "lost": int(lost),
+        "frames": int(sum(node.stats.waves for node in nodes)),
+    }
+
+
+def _row(mode: str, rate: float, p: dict) -> tuple:
+    return (mode, round(rate, 3), p["queries"],
+            round(p["throughput_qps"], 3), round(p["ttft_mean_ms"], 2),
+            round(p["ttft_p95_ms"], 2), round(p["latency_p95_s"], 3),
+            round(p["slo_attainment"], 4), p["lost"], p["frames"])
+
+
+def main(argv=None):
+    # argv=[] lets benchmarks.run invoke this section with defaults
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=2)
+    ap.add_argument("--rates", default=None,
+                    help="comma-separated arrival rates in queries/s "
+                         "(>= 3 points for a frontier)")
+    ap.add_argument("--slots", type=int, default=6)
+    ap.add_argument("--slot-s", type=float, default=0.5,
+                    help="nominal slot duration the rate multiplies "
+                         "into a per-slot volume")
+    ap.add_argument("--slo", type=float, default=1.5)
+    ap.add_argument("--trace", default="spike", choices=["spike", "ramp"])
+    ap.add_argument("--entities", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=192)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-autoscale", action="store_true",
+                    help="keep the built batch/chunk knobs instead of "
+                         "sizing them from the capacity profile")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizing: low rates, few slots")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless zero requests are lost and the "
+                         "standing engine beats the per-slot baseline "
+                         "on mean TTFT at the comparison rate")
+    args = ap.parse_args(argv)
+    if args.rates is None:
+        args.rates = "8,16,32" if args.smoke else "16,32,64"
+    if args.smoke:
+        args.slots = min(args.slots, 4)
+    rates = [float(r) for r in args.rates.split(",") if r]
+
+    bench = Bench("cluster_saturation", config={
+        "nodes": args.nodes, "rates": rates, "slots": args.slots,
+        "slot_s": args.slot_s, "slo_s": args.slo, "trace": args.trace,
+        "entities": args.entities, "paged": True,
+        "autoscale": not args.no_autoscale,
+        "archs": list(NODE_ARCHS[:args.nodes]), "smoke": args.smoke,
+        "jax": jax.__version__, "device": jax.devices()[0].platform,
+    })
+    header = ["mode", "arrival_qps", "queries", "throughput_qps",
+              "ttft_mean_ms", "ttft_p95_ms", "latency_p95_s",
+              "slo_attainment", "lost", "frames"]
+
+    frontier = {}
+    for rate in rates:
+        print(f"--- standing @ {rate:g} q/s ---", flush=True)
+        frontier[rate] = run_point(args, rate, "standing")
+        bench.add(*_row("standing", rate, frontier[rate]))
+
+    # per-slot continuous baseline at the middle rate: same trace, same
+    # seeds, a fresh session every slot instead of one warm one
+    mid = sorted(rates)[len(rates) // 2]
+    print(f"--- per_slot baseline @ {mid:g} q/s ---", flush=True)
+    baseline = run_point(args, mid, "continuous")
+    bench.add(*_row("per_slot", mid, baseline))
+    ratio = baseline["ttft_mean_ms"] / max(
+        frontier[mid]["ttft_mean_ms"], 1e-9)
+    # ratio > 1 means the standing engine's mean TTFT beat the
+    # per-slot queue's at the same arrival rate (the headline gate)
+    bench.add("per_slot_over_standing_ttft", round(mid, 3), 0,
+              0.0, round(ratio, 4), 0.0, 0.0, 0.0, 0, 0)
+    bench.finish(header)
+
+    lost = sum(p["lost"] for p in frontier.values()) + baseline["lost"]
+    print(f"frontier: {len(rates)} rates, {lost} lost request(s), "
+          f"standing/per-slot TTFT gain x{ratio:.2f} @ {mid:g} q/s",
+          flush=True)
+    if args.check and (lost or ratio <= 1.0):
+        raise SystemExit(
+            f"saturation check failed: lost={lost}, "
+            f"ttft gain x{ratio:.2f} (want 0 lost and gain > 1)")
+
+
+if __name__ == "__main__":
+    main()

@@ -41,7 +41,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="table1|table2|table3|fig5|fig6|motivation|"
-                         "ablation|kernels|cluster|retrieval|serving")
+                         "ablation|kernels|cluster|saturation|"
+                         "retrieval|serving")
     args = ap.parse_args()
     sections = {
         "table1": lambda: __import__("benchmarks.table1_latency_fit",
@@ -61,6 +62,9 @@ def main() -> None:
         "kernels": kernel_microbench,
         "cluster": lambda: __import__("benchmarks.cluster_e2e",
                                       fromlist=["main"]).main([]),
+        "saturation": lambda: __import__("benchmarks.cluster_saturation",
+                                         fromlist=["main"]).main(
+                                             ["--smoke"]),
         "retrieval": lambda: __import__("benchmarks.retrieval_scale",
                                         fromlist=["main"]).main(["--smoke"]),
         "serving": lambda: __import__("benchmarks.serve_throughput",

@@ -9,6 +9,6 @@ from repro.cluster.federation import (CentroidSketch,  # noqa: F401
                                       enable_federation)
 from repro.cluster.node import LiveEdgeNode, LiveNodeStats  # noqa: F401
 from repro.cluster.replay import (LiveWorkload, ReplayReport,  # noqa: F401
-                                  replay_trace)
+                                  autoscale_knobs, replay_trace)
 from repro.cluster.runtime import (ClusterRuntime,  # noqa: F401
                                    ClusterSlotMetrics)

@@ -10,11 +10,19 @@ It owns
   * optionally a ``SemanticQueryCache`` (repeat/near-duplicate queries
     skip the index probe) and a ``FederatedRetriever`` handle
     (sketch-routed cross-node retrieval; see ``cluster.federation``),
-  * a request scheduler per slot: ``ContinuousQueue`` by default —
-    chunked prefill (one static [B, C] program, no per-prompt-length
-    recompile on the recurrent xlstm/hymba nodes) with per-slot refill
-    the moment a row finishes — or the synchronous ``RequestQueue``
-    wave fallback (``queue="wave"``).
+  * a request scheduler: ``ContinuousQueue`` by default — chunked
+    prefill (one static [B, C] program, no per-prompt-length recompile
+    on the recurrent xlstm/hymba nodes) with per-slot refill the moment
+    a row finishes — fresh per slot (``queue="continuous"``), ONE
+    standing queue for the node's lifetime whose frames stay warm
+    across scheduler slots (``queue="standing"``), or the synchronous
+    ``RequestQueue`` wave fallback (``queue="wave"``).
+
+With a standing queue the node is a *standing engine*: each slot's
+queries stream into the live session (mid-frame refills instead of a
+cold frame restart), per-slot stats are deltas of the queue's monotone
+counters, and SLO shed hints act at the next refill.  ``close()``
+drains and releases the session.
 
 ``process_slot`` measures the real wall-clock path per query —
 retrieval (encoder dot-products through the top-k kernel) + generation
@@ -71,11 +79,17 @@ class LiveNodeStats:
     prefix_evictions: int = 0         # ... and LRU evictions for space
     remote_contexts: int = 0          # contexts fetched from other shards
     remote_gold: int = 0              # ... that contained the gold answer
+    ttft_s: List[float] = field(default_factory=list)  # per request,
+    # node-anchored: retrieval + queue wait + prefill (submit -> token 1)
 
     @property
     def queries_per_s(self) -> float:
         busy = self.retrieval_s + self.generate_s
         return self.queries / busy if busy > 0 else 0.0
+
+    @property
+    def ttft_mean(self) -> float:
+        return float(np.mean(self.ttft_s)) if self.ttft_s else 0.0
 
 
 class LiveEdgeNode:
@@ -91,8 +105,8 @@ class LiveEdgeNode:
                  queue: str = "continuous", prefill_chunk: int = 32,
                  paged: bool = False, block_size: int = 16,
                  admission: str = "fifo"):
-        if queue not in ("continuous", "wave"):
-            raise ValueError(f"queue={queue!r} (continuous|wave)")
+        if queue not in ("continuous", "standing", "wave"):
+            raise ValueError(f"queue={queue!r} (continuous|standing|wave)")
         self.node_id = node_id
         self.arch = arch
         self.docs = list(docs)
@@ -101,14 +115,16 @@ class LiveEdgeNode:
         self.top_k = top_k
         self.queue_kind = queue
         self.admission = admission
+        chunked = queue in ("continuous", "standing")
         # chunk must leave decode room; shrink for tiny test caches
         chunk = min(prefill_chunk, max(1, (max_len - max_new_tokens) // 2))
         self.engine = ServeEngine(
             cfg, params, max_len=max_len, batch_size=batch_size,
-            prefill_chunk=chunk if queue == "continuous" else None,
-            paged=paged and queue == "continuous", block_size=block_size)
+            prefill_chunk=chunk if chunked else None,
+            paged=paged and chunked, block_size=block_size)
         self.gen = GenerationParams(max_new_tokens=max_new_tokens,
                                     eos_id=EOS)
+        self._standing_queue: Optional[ContinuousQueue] = None
         index_kw = {"nprobe": nprobe} if index_kind == "ivf" else {}
         self.index = build_index(encoder.dim, index_kind, **index_kw)
         if self.docs:
@@ -202,12 +218,21 @@ class LiveEdgeNode:
         self.stats.retrieval_s += t_retrieval
 
         slot_key = jax.random.fold_in(self._key, self.stats.slots)
-        done_s: Dict[int, float] = {}      # rid -> completion time in slot
-        if self.queue_kind == "continuous":
+        comps: Dict[int, object] = {}      # rid -> completion
+        done_s: Dict[int, float] = {}      # rid -> generate-path latency
+        delta = None                       # this slot's ContinuousStats
+        if self.queue_kind in ("continuous", "standing"):
             # (tokens, prefix_len) submission: paged engines fork the
             # shared retrieved-context prefix instead of re-prefilling
-            queue = ContinuousQueue(self.engine, self.gen, key=slot_key,
-                                    policy=self.admission)
+            if self.queue_kind == "standing":
+                queue = self._ensure_standing_queue()
+            else:
+                queue = ContinuousQueue(self.engine, self.gen, key=slot_key,
+                                        policy=self.admission)
+            # per-slot stats are deltas of the queue's monotone counters
+            # (a fresh queue's delta equals its totals, so both kinds
+            # share this path — docs/ARCHITECTURE.md "Invariants")
+            base = queue.stats.snapshot()
             queue.set_shed(self.shed_fraction)
             cap = self.engine.cont_max_prompt_len(self.gen.max_new_tokens)
             rids = []
@@ -215,17 +240,27 @@ class LiveEdgeNode:
                 toks, plen = split_prompt(q.question, c, self.tok, cap=cap)
                 rids.append(queue.submit(toks, prefix_len=plen, trace=tid))
             t0 = time.perf_counter()
-            queue.run()
+            if queue.standing:
+                # stream this slot into the live session and return the
+                # moment its requests finish — other rows may straddle
+                # into the next slot mid-decode
+                queue.run(wait_for=rids)
+            else:
+                queue.run()
             self.stats.generate_s += time.perf_counter() - t0
-            self.stats.waves += queue.stats.frames
-            self.stats.refills += queue.stats.refills
-            self.stats.prefix_hits += queue.stats.prefix_hits
-            self.stats.prefix_misses += queue.stats.prefix_misses
-            self.stats.prefix_evictions += queue.stats.prefix_evictions
-            self.stats.shed += queue.stats.shed_hint_drops
-            self.stats.kv_exhaustions += queue.stats.kv_exhaustions
+            delta = queue.stats.delta(base)
+            self.stats.waves += delta.frames
+            self.stats.refills += delta.refills
+            self.stats.prefix_hits += delta.prefix_hits
+            self.stats.prefix_misses += delta.prefix_misses
+            self.stats.prefix_evictions += delta.prefix_evictions
+            self.stats.shed += delta.shed_hint_drops
+            self.stats.kv_exhaustions += delta.kv_exhaustions
+            self.stats.tokens_out += delta.tokens_out
+            self.stats.ttft_s.extend(t_retrieval + v for v in delta.ttft_s)
             for rid in rids:
-                done_s[rid] = queue.result(rid).done_s
+                comps[rid] = queue.pop_result(rid)
+                done_s[rid] = comps[rid].done_s
         else:
             queue = RequestQueue(self.engine, self.gen, key=slot_key)
             rids = queue.submit_all(
@@ -238,16 +273,17 @@ class LiveEdgeNode:
                 wave_elapsed.append(time.perf_counter() - t0)
             self.stats.generate_s += wave_elapsed[-1] if wave_elapsed else 0.0
             self.stats.waves += queue.stats.waves
+            self.stats.tokens_out += queue.stats.tokens_out
             for rid in rids:
+                comps[rid] = queue.result(rid)
                 done_s[rid] = wave_elapsed[queue.result(rid).wave]
-        self.stats.tokens_out += queue.stats.tokens_out
 
         results: List[QueryResult] = []
         self.last_contexts = {}
         self.last_sources = {}
         for q, rid, ctx, src, tid in zip(queries, rids, contexts, sources,
                                          tids):
-            comp = queue.result(rid)
+            comp = comps[rid]
             latency = t_retrieval + done_s[rid]
             with tr.span("detokenize", trace=tid,
                          tokens=len(comp.tokens)):
@@ -265,42 +301,94 @@ class LiveEdgeNode:
                                        quality, dropped,
                                        latency_s=latency, answer=answer))
         if obs_metrics.metrics_enabled():
-            self._push_metrics(queue, t_retrieval, results)
+            self._push_metrics(queue, delta, t_retrieval, results)
         return results
 
-    def _push_metrics(self, queue, t_retrieval: float,
+    def _push_metrics(self, queue, delta, t_retrieval: float,
                       results: List[QueryResult]) -> None:
         """Per-slot rollup into the global metrics registry (host-side,
-        after the slot's generate path has fully drained)."""
+        after the slot's generate path has drained).  ``delta`` is this
+        slot's ContinuousStats diff (None on the wave path): a standing
+        queue's counters are monotone for the node's lifetime, so the
+        slot's contribution is a snapshot diff, never the totals."""
         reg = obs_metrics.registry()
         node = str(self.node_id)
         reg.counter("node_queries", node=node).inc(len(results))
         reg.counter("node_drops", node=node).inc(
             sum(r.dropped for r in results))
         reg.counter("node_tokens_out", node=node).inc(
-            queue.stats.tokens_out)
-        # the queue is fresh per slot, so its stats ARE this slot's deltas
+            delta.tokens_out if delta is not None
+            else queue.stats.tokens_out)
         reg.counter("node_shed", node=node).inc(
-            getattr(queue.stats, "shed_hint_drops", 0))
+            delta.shed_hint_drops if delta is not None else 0)
         reg.counter("node_kv_exhaustions", node=node).inc(
-            getattr(queue.stats, "kv_exhaustions", 0))
+            delta.kv_exhaustions if delta is not None else 0)
         reg.histogram("node_retrieval_s", node=node).observe(t_retrieval)
         h = reg.histogram("node_latency_s", node=node)
         for r in results:
             h.observe(r.latency_s)
         h = reg.histogram("node_ttft_s", node=node)
-        for v in getattr(queue.stats, "ttft_s", []):
-            # queue TTFT is measured from run() start; the node's
-            # request clock starts at retrieval
+        for v in (delta.ttft_s if delta is not None else []):
+            # queue TTFT is arrival-anchored (submit -> first token);
+            # the node's request clock starts at retrieval
             h.observe(t_retrieval + v)
+        if self.queue_kind == "standing":
+            reg.gauge("node_queue_depth", node=node).set(
+                float(queue.depth()))
+            reg.gauge("node_queue_oldest_wait_s", node=node).set(
+                queue.oldest_wait_s())
         if self.cache is not None:
             reg.gauge("semantic_cache_hit_rate", node=node).set(
                 self.cache.hit_rate)
 
+    # ------------------------------------------------------------ lifecycle
+
+    def _ensure_standing_queue(self) -> ContinuousQueue:
+        if self._standing_queue is None:
+            self._standing_queue = ContinuousQueue(
+                self.engine, self.gen, key=self._key,
+                policy=self.admission, standing=True)
+        return self._standing_queue
+
+    def unfinished(self) -> int:
+        """Requests admitted to the standing queue but not finished —
+        the zero-lost invariant the saturation smoke asserts at exit."""
+        q = self._standing_queue
+        return len(q.unfinished()) if q is not None else 0
+
+    def close(self) -> None:
+        """Drain and release the standing session (admission → refill →
+        shed → drain ends here); no-op for per-slot queue kinds."""
+        if self._standing_queue is not None:
+            self._standing_queue.close()
+            self._standing_queue = None
+
+    def reconfigure(self, *, batch_size: Optional[int] = None,
+                    prefill_chunk: Optional[int] = None) -> None:
+        """Rebuild the engine with new batch/chunk knobs — the
+        saturation harness autoscales both from the node's measured
+        capacity profile.  Drains the standing session first; compiled
+        programs for the old shapes are dropped with the old engine."""
+        if batch_size is None and prefill_chunk is None:
+            return
+        self.close()
+        eng = self.engine
+        chunk = eng.prefill_chunk
+        if chunk is not None and prefill_chunk is not None:
+            chunk = min(prefill_chunk, max(
+                1, (eng.max_len - self.gen.max_new_tokens) // 2))
+        self.engine = ServeEngine(
+            eng.cfg, eng.params, max_len=eng.max_len,
+            batch_size=batch_size or eng.batch_size,
+            prefill_chunk=chunk, paged=eng.paged,
+            block_size=eng.block_size)
+
     # ------------------------------------------------------------ profiling
 
     def _make_queue(self, key=None):
-        if self.queue_kind == "continuous":
+        if self.queue_kind in ("continuous", "standing"):
+            # profiling always uses a fresh per-run queue: it must not
+            # disturb (or be skewed by) the standing session's frame
             return ContinuousQueue(self.engine, self.gen, key=key,
                                    policy=self.admission)
         return RequestQueue(self.engine, self.gen, key=key)

@@ -11,14 +11,15 @@ summary.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.cluster.runtime import ClusterRuntime, ClusterSlotMetrics
 from repro.core.cluster import Query
 from repro.data.corpus import QAPair
-from repro.data.traces import dirichlet_domain_trace, diurnal_volume_trace
+from repro.data.traces import (dirichlet_domain_trace, diurnal_volume_trace,
+                               ramp_volume_trace, spike_volume_trace)
 from repro.retrieval.encoder import TextEncoder
 
 
@@ -78,21 +79,55 @@ class ReplayReport:
         }
 
 
+def autoscale_knobs(measured_qps: float, batch_size: int,
+                    arrival_qps: float, mean_prompt_len: float, *,
+                    max_batch: int = 16, max_chunk: int = 64
+                    ) -> Dict[str, int]:
+    """Size a node's batch/chunk knobs for an open-loop arrival rate
+    from its measured capacity profile (``CapacityFunction.k`` is the
+    profiled throughput in queries/s at ``batch_size``).
+
+    Little's law: a request occupies a batch row for about
+    ``batch_size / measured_qps`` seconds, so absorbing ``arrival_qps``
+    needs ``arrival_qps * batch_size / measured_qps`` rows in flight.
+    The batch is the next power of two covering that concurrency; the
+    prefill chunk targets ~2 chunks per typical prompt, balancing
+    admission granularity against per-chunk dispatch overhead.  Feed
+    the result to ``LiveEdgeNode.reconfigure``."""
+    def pow2_clamp(x: float, lo: int, hi: int) -> int:
+        p = 1 << max(0, int(np.ceil(np.log2(max(float(x), 1.0)))))
+        return int(min(max(p, lo), hi))
+
+    concurrency = arrival_qps * batch_size / max(measured_qps, 1e-9)
+    return {"batch_size": pow2_clamp(concurrency, 1, max_batch),
+            "prefill_chunk": pow2_clamp(mean_prompt_len / 2, 8, max_chunk)}
+
+
 def replay_trace(runtime: ClusterRuntime, workload: LiveWorkload, *,
                  n_slots: int, slo_s: float, base_volume: int = 8,
                  trace: str = "diurnal", alpha: float = 1.5,
                  seed: int = 0, verbose: bool = False,
+                 volumes: Optional[Sequence[int]] = None,
                  on_slot=None) -> ReplayReport:
     """Run ``n_slots`` slots of trace-driven load through the runtime.
     ``on_slot(t, metrics)`` is called after each slot (live telemetry
-    rollups in ``launch.cluster_serve``)."""
+    rollups in ``launch.cluster_serve``).  An explicit per-slot
+    ``volumes`` sequence overrides the named ``trace`` (the saturation
+    harness sweeps arrival rates this way)."""
     n_domains = len(workload.domains)
-    if trace == "diurnal":
+    if volumes is not None:
+        volumes = list(volumes)[:n_slots]
+    elif trace == "diurnal":
         volumes = diurnal_volume_trace(n_slots, base=base_volume, seed=seed)
     elif trace == "uniform":
         volumes = [base_volume] * n_slots
+    elif trace == "spike":
+        volumes = spike_volume_trace(n_slots, base=base_volume, seed=seed)
+    elif trace == "ramp":
+        volumes = ramp_volume_trace(n_slots, base=base_volume, seed=seed)
     else:
-        raise ValueError(f"unknown trace {trace!r} (diurnal|uniform)")
+        raise ValueError(f"unknown trace {trace!r} "
+                         "(diurnal|uniform|spike|ramp)")
     mixes = dirichlet_domain_trace(n_slots, n_domains, alpha=alpha,
                                    seed=seed + 1)
     report = ReplayReport()

@@ -130,6 +130,15 @@ class ClusterRuntime(Coordinator):
             reg.gauge("node_slo_firing", node=str(nid)).set(float(firing))
         return firing_nodes
 
+    def close(self) -> None:
+        """Drain and release every node's standing session (no-op for
+        per-slot queue kinds).  Call after the last slot — a standing
+        node may still hold mid-decode rows and KV blocks."""
+        for node in self.nodes:
+            close = getattr(node, "close", None)
+            if callable(close):
+                close()
+
     def health(self) -> Dict[str, object]:
         """Cluster verdict for the ``/health`` endpoint: degraded while
         any node has a FIRING objective."""

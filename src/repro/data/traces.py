@@ -1,7 +1,7 @@
 """Arrival traces: ECW-style diurnal volume + Dirichlet domain skew."""
 from __future__ import annotations
 
-from typing import Iterator, List, Tuple
+from typing import Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -17,6 +17,34 @@ def diurnal_volume_trace(n_slots: int, base: int = 300, *,
     vol *= 1 + 0.1 * rng.standard_normal(n_slots)
     bursts = rng.random(n_slots) < burst_prob
     vol[bursts] *= burst_scale
+    return [max(1, int(v)) for v in vol]
+
+
+def spike_volume_trace(n_slots: int, base: int = 300, *,
+                       spike_slot: Optional[int] = None,
+                       magnitude: float = 4.0,
+                       width: int = 2, seed: int = 0) -> List[int]:
+    """Steady open-loop arrivals with one spike: ``width`` slots at
+    ``magnitude`` x base centered on ``spike_slot`` (default: middle).
+    The saturation harness uses it to drive a standing engine past its
+    steady-state capacity and watch the SLO feedback loop recover."""
+    rng = np.random.default_rng(seed)
+    if spike_slot is None:
+        spike_slot = n_slots // 2
+    vol = base * (1 + 0.05 * rng.standard_normal(n_slots))
+    lo = max(0, spike_slot - (width - 1) // 2)
+    vol[lo:lo + max(1, width)] *= magnitude
+    return [max(1, int(v)) for v in vol]
+
+
+def ramp_volume_trace(n_slots: int, base: int = 300, *,
+                      peak: float = 4.0, seed: int = 0) -> List[int]:
+    """Linear arrival-rate ramp from ``base`` to ``peak * base`` —
+    sweeps a throughput-vs-SLO frontier in one replay."""
+    rng = np.random.default_rng(seed)
+    t = np.arange(n_slots)
+    scale = 1 + (peak - 1) * t / max(n_slots - 1, 1)
+    vol = base * scale * (1 + 0.05 * rng.standard_normal(n_slots))
     return [max(1, int(v)) for v in vol]
 
 

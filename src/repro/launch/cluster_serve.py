@@ -11,6 +11,8 @@ latency/quality/drop metrics.
         --nodes 2 --slots 3
     ... --no-inter-node          # capacity-unaware routing ablation
     ... --trace uniform          # constant volume instead of diurnal
+    ... --standing               # standing engines: frames stay warm
+    ... --trace spike --arrival-rate 40   # open-loop saturation replay
     ... --index ivf --nprobe 3   # ANN retrieval instead of the flat scan
     ... --federated --cache      # cross-node retrieval + semantic cache
     ... --ckpt experiments/tiny_lm.npz   # trained generator weights
@@ -132,7 +134,17 @@ def main():
                          "capacities bind and Algorithm 1 actually "
                          "load-balances")
     ap.add_argument("--trace", default="diurnal",
-                    choices=["diurnal", "uniform"])
+                    choices=["diurnal", "uniform", "spike", "ramp"])
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    metavar="QPS",
+                    help="open-loop arrival rate: sets the base per-slot "
+                         "volume to QPS * --slot-s (overrides --per-slot)")
+    ap.add_argument("--slot-s", type=float, default=1.0,
+                    help="nominal slot duration --arrival-rate multiplies")
+    ap.add_argument("--require-healthy-exit", action="store_true",
+                    help="exit 1 unless every admitted request finished "
+                         "and /health recovers to ok after the trace "
+                         "(the CI saturation smoke gate)")
     ap.add_argument("--no-inter-node", action="store_true",
                     help="ablation: capacity-unaware identifier sampling")
     ap.add_argument("--smoke", action="store_true",
@@ -158,10 +170,15 @@ def main():
                     help="examples/train_tiny.py checkpoint (.npz); "
                          "loads into matching-arch nodes")
     ap.add_argument("--queue", default="continuous",
-                    choices=["continuous", "wave"],
+                    choices=["continuous", "standing", "wave"],
                     help="per-node request scheduler: continuous "
-                         "batching (chunked prefill + per-slot refill) "
+                         "batching fresh per slot, one standing "
+                         "queue whose frames stay warm across slots, "
                          "or synchronous waves")
+    ap.add_argument("--standing", action="store_true",
+                    help="shorthand for --queue standing: one "
+                         "long-lived session per node, streamed "
+                         "admissions, mid-frame shed")
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="prompt chunk size of the continuous prefill "
                          "program")
@@ -200,6 +217,10 @@ def main():
                     help="fraction of a FIRING node's backlog its queue "
                          "sheds per slot")
     args = ap.parse_args()
+    if args.standing:
+        args.queue = "standing"
+    if args.arrival_rate is not None:
+        args.per_slot = max(1, round(args.arrival_rate * args.slot_s))
 
     rec = obs.enable() if args.trace_out else None
     # registry pushes stay on for the whole run: the SLO monitors, the
@@ -288,6 +309,8 @@ def main():
           f"p50={s['latency_p50_s']:.2f}s p95={s['latency_p95_s']:.2f}s "
           f"imbalance={s['load_imbalance']:.2f} "
           f"ppo_updates={s['ppo_updates']}")
+    lost = sum(node.unfinished() for node in nodes)
+    runtime.close()          # drain + release standing sessions
     for node in nodes:
         st = node.stats
         extra = ""
@@ -296,15 +319,18 @@ def main():
         if args.federated:
             extra += (f", {st.remote_contexts} remote ctx "
                       f"({st.remote_gold} gold)")
-        rounds = "frames" if args.queue == "continuous" else "waves"
-        if args.queue == "continuous":
-            extra += f", {st.refills} refills"
+        rounds = "waves" if args.queue == "wave" else "frames"
+        if args.queue != "wave":
+            extra += (f", {st.refills} refills, "
+                      f"ttft {st.ttft_mean * 1e3:.0f}ms mean")
         if st.shed:
             extra += f", {st.shed} shed"
         print(f"  node {node.node_id} [{node.arch}]: {st.queries} queries "
               f"in {st.waves} {rounds}, {st.tokens_out} tokens, "
               f"{st.drops} drops, {st.queries_per_s:.1f} q/s measured"
               + extra)
+    if args.queue == "standing":
+        print(f"standing: {lost} request(s) unfinished at exit")
     if runtime.monitors:
         h = runtime.health()
         print(f"slo: status={h['status']} "
@@ -330,10 +356,35 @@ def main():
         print(f"trace: {rec.span_count()} spans "
               f"({len(rec)} events, {rec.dropped} dropped) "
               f"-> {args.trace_out}")
+    healthy = True
+    if args.require_healthy_exit:
+        healthy = _await_recovery(runtime)
+        print(f"health at exit: "
+              f"{'ok' if healthy else runtime.health()['status']}")
     if srv is not None:
         _probe_endpoint(srv)
         srv.stop()
     print(f"total {time.perf_counter() - t0:.0f}s")
+    if args.require_healthy_exit and (lost or not healthy):
+        raise SystemExit(f"unhealthy exit: {lost} unfinished request(s), "
+                         f"health_ok={healthy}")
+
+
+def _await_recovery(runtime, timeout_s: float = 20.0) -> bool:
+    """Give the SLO monitors time to clear after the trace's spike: bad
+    samples age out of the burn-rate windows, burn drops below the
+    clear threshold, hysteresis releases.  True once /health says ok."""
+    t0 = time.perf_counter()
+    while True:
+        if runtime.store is not None:
+            runtime.store.sample()
+        for mon in runtime.monitors.values():
+            mon.evaluate()
+        if runtime.health()["status"] == "ok":
+            return True
+        if time.perf_counter() - t0 >= timeout_s:
+            return False
+        time.sleep(0.5)
 
 
 def _probe_endpoint(srv) -> None:

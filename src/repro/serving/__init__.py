@@ -1,7 +1,9 @@
 """Serving stack: compiled-decode engine, sampling params, and two
 request schedulers — synchronous ``RequestQueue`` waves and
 ``ContinuousQueue`` continuous batching (chunked prefill + per-slot
-refill, for engines built with ``prefill_chunk=``).
+refill, for engines built with ``prefill_chunk=``; ``standing=True``
+keeps one live session across ``run()`` calls — the standing-engine
+mode the cluster nodes use to keep frames warm between slots).
 
     from repro.serving import ServeEngine, GenerationParams, RequestQueue
     from repro.serving import ContinuousQueue

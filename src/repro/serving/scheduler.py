@@ -19,6 +19,13 @@ honored exactly, and per-request latency / time-to-first-token land in
     queue = RequestQueue(engine, GenerationParams(max_new_tokens=24))
     rids = queue.submit_all(token_prompts)
     outs = queue.run()                    # {rid: [token, ...]}
+
+With ``standing=True`` the ``ContinuousQueue`` keeps ONE long-lived
+session across ``run()`` calls: frames stay warm between scheduler
+slots, ``run(wait_for=...)`` returns as soon as the named requests
+finish (other rows keep decoding next call), and all stats counters
+are monotone — callers take ``stats.snapshot()`` / ``stats.delta()``
+for per-interval numbers.  ``close()`` drains and releases the frame.
 """
 from __future__ import annotations
 
@@ -193,8 +200,8 @@ class ContinuousCompletion:
     budget: int                   # per-request max_new_tokens
     slot: int                     # engine batch row it decoded in
     frame: int                    # session frame it was admitted into
-    ttft_s: float                 # run-start -> first token (prefill done)
-    done_s: float                 # run-start -> last token
+    ttft_s: float                 # submit -> first token (arrival-anchored)
+    done_s: float                 # submit -> last token (arrival-anchored)
     shed: bool = False            # dropped at run() start by a shed hint
 
 
@@ -215,6 +222,35 @@ class ContinuousStats:
     kv_exhaustions: int = 0       # paged pool-exhaustion waits
     ttft_s: List[float] = field(default_factory=list)
     latency_s: List[float] = field(default_factory=list)
+
+    # Every scalar above is a monotone counter for the queue's lifetime
+    # (standing queues never reset them).  Per-interval numbers come
+    # from snapshot()/delta(): take a snapshot before an interval and
+    # diff after it — docs/ARCHITECTURE.md, "per-slot stats are deltas
+    # of monotonic counters".
+    COUNTERS = ("requests", "tokens_out", "frames", "segments", "refills",
+                "prefix_hits", "prefix_misses", "prefix_evictions",
+                "admission_skips", "shed", "shed_hint_drops",
+                "cow_forks", "kv_exhaustions")
+
+    def snapshot(self) -> Dict[str, int]:
+        """Point-in-time copy of the monotone counters (plus the lengths
+        of the per-request sample lists)."""
+        snap = {k: getattr(self, k) for k in self.COUNTERS}
+        snap["ttft_n"] = len(self.ttft_s)
+        snap["latency_n"] = len(self.latency_s)
+        return snap
+
+    def delta(self, base: Dict[str, int]) -> "ContinuousStats":
+        """Stats accumulated since ``base`` (an earlier snapshot()) as a
+        fresh ContinuousStats — percentiles/means then cover only the
+        interval's requests."""
+        d = ContinuousStats()
+        for k in self.COUNTERS:
+            setattr(d, k, getattr(self, k) - base[k])
+        d.ttft_s = self.ttft_s[base["ttft_n"]:]
+        d.latency_s = self.latency_s[base["latency_n"]:]
+        return d
 
     # the one shared empty-safe percentile (obs.metrics.percentile)
     _pct = staticmethod(percentile)
@@ -259,7 +295,7 @@ class _ContRequest:
     budget: int
     prefix_len: int = 0           # retrieved-context prefix (0 = none)
     trace: Optional[str] = None   # obs trace id (None = untraced)
-    t_submit: float = 0.0         # perf_counter at submit (0 = untraced)
+    t_submit: float = 0.0         # perf_counter at submit (TTFT anchor)
     t_admit: float = 0.0          # perf_counter at admission
 
 
@@ -277,11 +313,21 @@ class ContinuousQueue:
     queue's ``GenerationParams``) and an optional ``prefix_len`` marking
     a shared retrieved-context prefix (paged engines fork its prefilled
     blocks out of the session's ``PrefixCache``).  Completion identity,
-    per-request latency and TTFT are preserved via request ids."""
+    per-request latency and TTFT are preserved via request ids; both are
+    arrival-anchored (measured from ``submit()``).
+
+    ``standing=True`` makes the queue a *standing engine*: one
+    long-lived session persists across ``run()`` calls, so a stream of
+    ``submit()`` + ``run(wait_for=...)`` rounds (one per scheduler
+    slot) admits into live frames instead of re-prefilling a cold one,
+    requests may straddle a round mid-decode, and ``set_shed`` hints
+    take effect at the next refill — mid-frame.  ``close()`` drains and
+    releases the frame/KV pool."""
 
     def __init__(self, engine: ServeEngine,
                  gen: Optional[GenerationParams] = None, *, key=None,
-                 policy: str = "fifo", prefix_capacity: int = 8):
+                 policy: str = "fifo", prefix_capacity: int = 8,
+                 standing: bool = False):
         self.engine = engine
         self.gen = gen or GenerationParams()
         if engine.prefill_chunk is None:
@@ -300,11 +346,15 @@ class ContinuousQueue:
                 f"engine cache (max_len={engine.max_len})")
         self.policy = policy
         self.prefix_capacity = prefix_capacity
+        self.standing = bool(standing)
         self._key = key if key is not None else jax.random.PRNGKey(0)
         self._pending: List[_ContRequest] = []
         self._done: Dict[int, ContinuousCompletion] = {}
         self._next_rid = 0
         self._shed_fraction = 0.0
+        self._session: Optional[ContinuousSession] = None
+        self._owner: Dict[int, _ContRequest] = {}   # slot -> live request
+        self._finished: set = set()                 # rids with final tokens
         self.stats = ContinuousStats()
 
     # -------------------------------------------------------------- intake
@@ -332,6 +382,7 @@ class ContinuousQueue:
             # (mirrors ServeEngine._route_empty_prompts)
             self._done[rid] = ContinuousCompletion(
                 rid, [], 0, budget, -1, -1, 0.0, 0.0)
+            self._finished.add(rid)
             return rid
         prefix_len = max(0, min(prefix_len or 0, len(prompt) - 1))
         cap = self.engine.cont_max_prompt_len(self.gen.max_new_tokens)
@@ -342,7 +393,7 @@ class ContinuousQueue:
             self._check_block_span(prompt, prefix_len, budget)
         self._pending.append(_ContRequest(
             rid, prompt, budget, prefix_len, trace=trace,
-            t_submit=obs_trace.get_tracer().now()))
+            t_submit=time.perf_counter()))
         return rid
 
     def _truncate(self, prompt: List[int], prefix_len: int,
@@ -407,6 +458,23 @@ class ContinuousQueue:
     def pending(self) -> int:
         return len(self._pending)
 
+    def depth(self) -> int:
+        """Standing-queue depth: pending + live (admitted, still
+        decoding) requests."""
+        return len(self._pending) + len(self._owner)
+
+    def oldest_wait_s(self) -> float:
+        """Age of the oldest still-pending (not yet admitted) request;
+        0.0 when nothing waits."""
+        if not self._pending:
+            return 0.0
+        return time.perf_counter() - min(r.t_submit for r in self._pending)
+
+    def unfinished(self) -> List[int]:
+        """Rids submitted but not finished: pending plus mid-decode."""
+        return [r.rid for r in self._pending] \
+            + [r.rid for r in self._owner.values()]
+
     # ----------------------------------------------------------- scheduling
 
     def _admissible(self, session: ContinuousSession
@@ -433,15 +501,53 @@ class ContinuousQueue:
                     best = (cost, r)
         return best[1] if best else None
 
-    def run(self) -> Dict[int, List[int]]:
-        """Drain the queue; returns {rid: generated tokens}.  TTFT and
-        latency are measured from this call's start (queue wait
-        included), so they compose across requests like a serving
-        trace."""
-        t0 = time.perf_counter()
+    def _ensure_session(self) -> ContinuousSession:
+        """The live session: standing queues keep one for their whole
+        lifetime; per-run queues get a fresh one each ``run()`` (the
+        previous was released at run exit)."""
+        if self._session is None:
+            self._session = ContinuousSession(
+                self.engine, self.gen, key=self._key,
+                prefix_cache=self.prefix_capacity if self.engine.paged
+                else None)
+        return self._session
+
+    @staticmethod
+    def _session_base(session: ContinuousSession) -> Dict[str, int]:
+        """Snapshot of the session/allocator/prefix-cache counters at
+        run() entry — a standing session outlives the run, so only the
+        run's deltas roll into ``self.stats``."""
+        base = {"frames": session.frames, "segments": session.segments,
+                "refills": session.refills, "forks": 0, "exhaustions": 0,
+                "prefix_hits": 0, "prefix_misses": 0, "prefix_evictions": 0}
+        if session.paged:
+            base["forks"] = session.allocator.forks
+            base["exhaustions"] = session.allocator.exhaustions
+        if session.prefix_cache is not None:
+            base["prefix_hits"] = session.prefix_cache.hits
+            base["prefix_misses"] = session.prefix_cache.misses
+            base["prefix_evictions"] = session.prefix_cache.evictions
+        return base
+
+    def run(self, wait_for: Optional[Iterable[int]] = None
+            ) -> Dict[int, List[int]]:
+        """Pump the engine until the target requests finish; returns
+        {rid: generated tokens} for every completed request so far.
+
+        By default every submitted request is drained.  A standing
+        queue may pass ``wait_for=<rids>``: the call returns as soon as
+        those requests finish, leaving other live rows mid-decode for
+        the next ``run()`` — a request can straddle scheduler slots
+        without a frame restart.  TTFT and latency are arrival-anchored
+        (measured from each request's ``submit()``), so they compose
+        across runs like a serving trace."""
+        if wait_for is not None and not self.standing:
+            raise ValueError("run(wait_for=...) needs standing=True: a "
+                             "per-run queue releases its session at run "
+                             "exit and would drop mid-decode rows")
         tr = obs_trace.get_tracer()
         paged = self.engine.paged
-        base = self._stats_base()
+        base = self.stats.snapshot()
         if self._shed_fraction > 0.0 and self._pending:
             # shed the tail (latest arrivals): the oldest requests have
             # already waited longest and would be the first SLO misses
@@ -451,40 +557,99 @@ class ContinuousQueue:
                 self._done[r.rid] = ContinuousCompletion(
                     r.rid, [], len(r.prompt), r.budget, -1, -1, 0.0, 0.0,
                     shed=True)
+                self._finished.add(r.rid)
+                if tr.enabled and r.trace is not None:
+                    # terminal span: a shed trace never reaches decode,
+                    # so this is what makes its causal tree complete
+                    # (trace_report counts `shed` as a terminal stage)
+                    tr.emit("shed", r.trace, r.t_submit,
+                            time.perf_counter(), reason="slo_hint")
             if n_shed:
                 del self._pending[len(self._pending) - n_shed:]
                 self.stats.shed_hint_drops += n_shed
-        session = ContinuousSession(
-            self.engine, self.gen, key=self._key,
-            prefix_cache=self.prefix_capacity if paged else None)
-        owner: Dict[int, _ContRequest] = {}
+        session = self._ensure_session()
+        sbase = self._session_base(session)
+        owner = self._owner
+        targets = set(wait_for) if wait_for is not None else \
+            {r.rid for r in self._pending} | {r.rid for r in owner.values()}
 
         def admit(slot: int, r: _ContRequest) -> None:
             owner[slot] = r
             abs_now = time.perf_counter()
-            now = abs_now - t0
             if tr.enabled:
                 session.traces[slot] = r.trace
-                if r.trace is not None and r.t_submit:
+                if r.trace is not None:
                     # queue wait becomes a retroactive span: admission is
                     # the only point where both endpoints are known
                     tr.emit("queue_wait", r.trace, r.t_submit, abs_now,
                             slot=slot)
             r.t_admit = abs_now
-            self.stats.ttft_s.append(now)
+            ttft = abs_now - r.t_submit
+            self.stats.ttft_s.append(ttft)
             self._done[r.rid] = ContinuousCompletion(
                 r.rid, [], len(r.prompt), r.budget, slot,
-                session.frames, now, now)
+                session.frames, ttft, ttft)
 
         self.engine.start_profile()
         try:
-            while self._pending or session.active():
-                if not session.active() \
-                        and (not paged or session.cache is None):
-                    # non-paged sessions restart a frame whenever the batch
-                    # drains; a paged session only ever opens ONE frame (the
-                    # pool persists, so admission continues through refill
-                    # below — restarting would drop the prefix cache)
+            while not targets <= self._finished:
+                if session.active():
+                    # drain (run to the last row) only when every live
+                    # row is waited for — a straddling straggler keeps
+                    # its slot and resumes next run()
+                    live = {r.rid for r in owner.values()}
+                    for slot, tokens in session.run_segment(
+                            drain=not self._pending and live <= targets):
+                        r = owner.pop(slot)
+                        abs_now = time.perf_counter()
+                        c = self._done[r.rid]
+                        c.tokens = tokens
+                        c.done_s = abs_now - r.t_submit
+                        self._finished.add(r.rid)
+                        self.stats.tokens_out += len(tokens)
+                        self.stats.latency_s.append(c.done_s)
+                        if tr.enabled:
+                            session.traces.pop(slot, None)
+                            if r.trace is not None and r.t_admit:
+                                tr.emit("decode", r.trace, r.t_admit,
+                                        abs_now, tokens=len(tokens),
+                                        slot=slot)
+                    if paged and obs_metrics.metrics_enabled():
+                        obs_metrics.registry().gauge(
+                            "kv_pool_fragmentation").set(
+                                session.pool_fragmentation())
+                    if targets <= self._finished:
+                        break
+                admitted = 0
+                if session.cache is not None:
+                    # refill first: a drained-but-warm frame admits at
+                    # its live position (single-row exact-pad prefill)
+                    # instead of paying a cold frame restart
+                    for slot in session.free_slots():
+                        r = self._admissible(session)
+                        if r is None:
+                            break
+                        self._pending.remove(r)
+                        if tr.enabled:
+                            session.traces[slot] = r.trace
+                        with tr.span("prefill", trace=r.trace,
+                                     mode="refill", slot=slot,
+                                     prompt_len=len(r.prompt),
+                                     prefix_len=r.prefix_len):
+                            session.refill(slot, r.prompt, r.budget,
+                                           prefix_len=r.prefix_len or None)
+                        admitted += 1
+                        admit(slot, r)
+                if self._pending and not admitted and not session.active():
+                    if paged and session.cache is not None:
+                        raise RuntimeError(
+                            "paged admission stalled: a pending request "
+                            "cannot be scheduled even into an idle frame")
+                    # open a frame: the session's first, or a non-paged
+                    # restart after a drain left nothing refillable (a
+                    # paged session only ever opens ONE frame — the pool
+                    # persists, so admission continues through refill
+                    # above; restarting would drop the prefix cache)
                     n = max(1, session.frame_capacity(
                         [(len(r.prompt), r.budget) for r in self._pending])) \
                         if paged else session.B
@@ -506,111 +671,90 @@ class ContinuousQueue:
                                             [r.budget for r in batch])
                     for slot, r in enumerate(batch):
                         admit(slot, r)
-                    continue
-                if session.active():
-                    for slot, tokens in session.run_segment(
-                            drain=not self._pending):
-                        r = owner.pop(slot)
-                        abs_now = time.perf_counter()
-                        now = abs_now - t0
-                        c = self._done[r.rid]
-                        c.tokens, c.done_s = tokens, now
-                        self.stats.tokens_out += len(tokens)
-                        self.stats.latency_s.append(now)
-                        if tr.enabled:
-                            session.traces.pop(slot, None)
-                            if r.trace is not None and r.t_admit:
-                                tr.emit("decode", r.trace, r.t_admit,
-                                        abs_now, tokens=len(tokens),
-                                        slot=slot)
-                    if paged and obs_metrics.metrics_enabled():
-                        obs_metrics.registry().gauge(
-                            "kv_pool_fragmentation").set(
-                                session.pool_fragmentation())
-                admitted = 0
-                for slot in session.free_slots():
-                    r = self._admissible(session)
-                    if r is None:
-                        break
-                    self._pending.remove(r)
-                    if tr.enabled:
-                        session.traces[slot] = r.trace
-                    with tr.span("prefill", trace=r.trace, mode="refill",
-                                 slot=slot, prompt_len=len(r.prompt),
-                                 prefix_len=r.prefix_len):
-                        session.refill(slot, r.prompt, r.budget,
-                                       prefix_len=r.prefix_len or None)
-                    admitted += 1
-                    admit(slot, r)
-                if paged and self._pending and not admitted \
-                        and not session.active():
-                    raise RuntimeError(
-                        "paged admission stalled: a pending request cannot "
-                        "be scheduled even into an idle frame")
+                if not self._pending and not session.active():
+                    break   # wait_for named rids this queue never saw
         finally:
             self.engine.stop_profile()
-        self.stats.frames += session.frames
-        self.stats.segments += session.segments
-        self.stats.refills += session.refills
+            if not self.standing and targets - self._finished:
+                # aborted mid-run (e.g. paged stall): a per-run queue
+                # cannot resume a half-drained session on the next run
+                session.release()
+                self._session = None
+                self._owner.clear()
+        s, st = session, self.stats
+        st.frames += s.frames - sbase["frames"]
+        st.segments += s.segments - sbase["segments"]
+        st.refills += s.refills - sbase["refills"]
         if paged:
-            # the allocator is fresh per run, so its lifetime totals
-            # ARE this run's deltas
-            self.stats.cow_forks += session.allocator.forks
-            self.stats.kv_exhaustions += session.allocator.exhaustions
-        if session.prefix_cache is not None:
-            self.stats.prefix_hits += session.prefix_cache.hits
-            self.stats.prefix_misses += session.prefix_cache.misses
-            self.stats.prefix_evictions += session.prefix_cache.evictions
+            st.cow_forks += s.allocator.forks - sbase["forks"]
+            st.kv_exhaustions += \
+                s.allocator.exhaustions - sbase["exhaustions"]
+        if s.prefix_cache is not None:
+            st.prefix_hits += s.prefix_cache.hits - sbase["prefix_hits"]
+            st.prefix_misses += \
+                s.prefix_cache.misses - sbase["prefix_misses"]
+            st.prefix_evictions += \
+                s.prefix_cache.evictions - sbase["prefix_evictions"]
         if obs_metrics.metrics_enabled():
             self._push_metrics(session, base)
-        session.release()
+        if not self.standing:
+            session.release()
+            self._session = None
         return {rid: c.tokens for rid, c in self._done.items()}
 
-    def _stats_base(self) -> Dict[str, int]:
-        """Snapshot of the cumulative stats counters at run() entry, so
-        the metrics push only reports THIS run's deltas."""
-        s = self.stats
-        return {"tokens_out": s.tokens_out,
-                "admission_skips": s.admission_skips, "shed": s.shed,
-                "shed_hint_drops": s.shed_hint_drops,
-                "ttft_n": len(s.ttft_s), "latency_n": len(s.latency_s)}
+    def close(self, drain: bool = True) -> None:
+        """Retire a standing queue: finish every unfinished request
+        (``drain=True``) or abandon them, then release the session's
+        frame and KV pool.  Safe to call twice; the queue stays usable
+        (a later submit()+run() opens a fresh session)."""
+        if drain and self.unfinished():
+            self.run()
+        if self._session is not None:
+            self._session.release()
+            self._session = None
+        self._owner.clear()
+        self._pending.clear()
 
     def _push_metrics(self, session: ContinuousSession,
                       base: Dict[str, int]) -> None:
         """Roll this run's deltas into the global metrics registry.
-        Host-side and post-drain only — never on the segment hot path."""
+        Host-side and post-segment only — never on the decode hot path.
+        ``base`` is the stats snapshot taken at run() entry; a standing
+        queue's counters are monotone, so the diff is exactly this
+        run's contribution."""
         reg = obs_metrics.registry()
-        s = self.stats
+        d = self.stats.delta(base)
         reg.counter("queue_requests_admitted", policy=self.policy).inc(
-            len(s.ttft_s) - base["ttft_n"])
-        reg.counter("queue_admission_skips").inc(
-            s.admission_skips - base["admission_skips"])
-        reg.counter("queue_shed").inc(s.shed - base["shed"])
-        reg.counter("queue_shed_hint_drops").inc(
-            s.shed_hint_drops - base["shed_hint_drops"])
-        reg.counter("queue_tokens_out").inc(
-            s.tokens_out - base["tokens_out"])
+            len(d.ttft_s))
+        reg.counter("queue_admission_skips").inc(d.admission_skips)
+        reg.counter("queue_shed").inc(d.shed)
+        reg.counter("queue_shed_hint_drops").inc(d.shed_hint_drops)
+        reg.counter("queue_tokens_out").inc(d.tokens_out)
         h = reg.histogram("queue_ttft_s")
-        for v in s.ttft_s[base["ttft_n"]:]:
+        for v in d.ttft_s:
             h.observe(v)
         h = reg.histogram("queue_latency_s")
-        for v in s.latency_s[base["latency_n"]:]:
+        for v in d.latency_s:
             h.observe(v)
+        reg.gauge("queue_depth").set(float(self.depth()))
+        reg.gauge("queue_oldest_wait_s").set(self.oldest_wait_s())
         if session.paged:
             alloc = session.allocator
             reg.gauge("kv_pool_utilization").set(alloc.utilization())
             reg.gauge("kv_pool_high_watermark").set(alloc.high_watermark)
-            # the session's allocator / prefix cache are fresh per run,
-            # so their lifetime totals ARE this run's deltas
-            reg.counter("kv_pool_cow_forks").inc(alloc.forks)
-            reg.counter("kv_pool_exhaustion_waits").inc(alloc.exhaustions)
+            reg.counter("kv_pool_cow_forks").inc(d.cow_forks)
+            reg.counter("kv_pool_exhaustion_waits").inc(d.kv_exhaustions)
             if session.prefix_cache is not None:
-                reg.counter("prefix_cache_hits").inc(
-                    session.prefix_cache.hits)
-                reg.counter("prefix_cache_misses").inc(
-                    session.prefix_cache.misses)
+                reg.counter("prefix_cache_hits").inc(d.prefix_hits)
+                reg.counter("prefix_cache_misses").inc(d.prefix_misses)
                 reg.counter("prefix_cache_evictions").inc(
-                    session.prefix_cache.evictions)
+                    d.prefix_evictions)
 
     def result(self, rid: int) -> ContinuousCompletion:
         return self._done[rid]
+
+    def pop_result(self, rid: int) -> ContinuousCompletion:
+        """``result()`` that releases the stored completion — standing
+        queues live for the node's lifetime, so per-slot consumers pop
+        to keep the done-map bounded."""
+        return self._done.pop(rid)

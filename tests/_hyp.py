@@ -42,8 +42,14 @@ except ModuleNotFoundError:
             seq = list(seq)
             return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
 
-    def settings(**_kw):
-        return lambda f: f
+    def settings(max_examples=None, **_kw):
+        # honors max_examples when applied OUTSIDE @given (the usual
+        # stacking order); other hypothesis knobs are ignored
+        def deco(f):
+            if max_examples is not None:
+                f._hyp_max_examples = int(max_examples)
+            return f
+        return deco
 
     def given(*strats):
         def deco(f):
@@ -55,7 +61,8 @@ except ModuleNotFoundError:
 
             def wrapper(*args, **kwargs):
                 rng = np.random.default_rng(0)
-                for _ in range(_N_EXAMPLES):
+                n = getattr(wrapper, "_hyp_max_examples", _N_EXAMPLES)
+                for _ in range(n):
                     draws = {n: s.draw(rng)
                              for n, s in zip(strat_names, strats)}
                     f(*args, **kwargs, **draws)

@@ -149,8 +149,11 @@ def test_ttft_and_latency_stats_monotone(key):
     queue.run()
     st = queue.stats
     assert len(st.ttft_s) == len(prompts) == len(st.latency_s)
-    # TTFT is recorded at admission: FIFO admissions => monotone
-    assert st.ttft_s == sorted(st.ttft_s)
+    # TTFT is arrival-anchored (submit -> admission) and admissions are
+    # FIFO, so the sequence is monotone up to the sub-millisecond skew
+    # between consecutive submit() stamps within one admission batch
+    for a, b in zip(st.ttft_s, st.ttft_s[1:]):
+        assert b >= a - 1e-3
     for rid in rids:
         c = queue.result(rid)
         assert 0.0 <= c.ttft_s <= c.done_s      # first token before last

@@ -86,6 +86,19 @@ RULES: Dict[str, List[Rule]] = {
         Rule(("scheduled",), "p95_s", "lower", rel_tol=0.75,
              abs_tol=0.05),
     ],
+    "cluster_saturation": [
+        # the zero-lost invariant is exact: a standing engine may
+        # never strand an admitted request at exit
+        Rule(("standing",), "lost", "lower", abs_tol=0.0),
+        Rule(("standing",), "throughput_qps", "higher", rel_tol=0.60),
+        Rule(("standing",), "ttft_mean_ms", "lower", rel_tol=0.60,
+             abs_tol=50.0),
+        Rule(("standing",), "slo_attainment", "higher", abs_tol=0.25),
+        # per-slot/standing mean-TTFT ratio lives in the ttft_mean_ms
+        # column of its summary row; > 1 means standing wins
+        Rule(("per_slot_over_standing_ttft",), "ttft_mean_ms", "higher",
+             rel_tol=0.50),
+    ],
 }
 
 

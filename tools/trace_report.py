@@ -28,6 +28,10 @@ from typing import Dict, List, Optional, Tuple
 # fully reconstructed causal tree (docs/OBSERVABILITY.md, span taxonomy)
 REQUIRED_STAGES = ("identify", "route", "retrieve", "prefill", "decode",
                    "detokenize")
+# stages that terminate a request before decode; a trace containing one
+# is a complete tree even without the downstream serving stages (an SLO
+# shed hint deliberately drops the pending tail — docs/OBSERVABILITY.md)
+TERMINAL_STAGES = ("shed",)
 
 
 def load(path: str) -> Tuple[Optional[dict], List[dict], List[str]]:
@@ -97,7 +101,8 @@ def completeness(events: List[dict]) -> Tuple[int, int, float]:
         if "request" not in names:
             continue
         rooted += 1
-        if all(s in names for s in REQUIRED_STAGES):
+        if (all(s in names for s in REQUIRED_STAGES)
+                or any(s in names for s in TERMINAL_STAGES)):
             complete += 1
     return complete, rooted, (complete / rooted if rooted else 0.0)
 
